@@ -1,0 +1,51 @@
+"""Paper Figs 11 / 15: time to pack the six surfaces into buffers.
+
+Packs from the ordering's path-ordered storage via the precomputed index
+lists (the paper's mechanism), for halo widths {1, 2} and M ∈ {32, 64}.
+Also reports the structural metric behind the timings: DMA-run count
+(contiguous runs per face) — the TPU-side cost model, where each run is
+one descriptor for kernels/sfc_gather.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import HILBERT, MORTON, ROW_MAJOR, apply_ordering
+from repro.core.surfaces import PAPER_SURFACE_NAMES, run_stats
+from repro.kernels.ops import pack_surface
+
+FACE_GROUPS = (("k0", "k1"), ("i0", "i1"), ("j0", "j1"))
+N_REPS = 20
+
+
+def rows(sizes=(32, 64), widths=(1, 2)):
+    out = []
+    rng = np.random.default_rng(0)
+    for M in sizes:
+        cube = jnp.asarray(rng.random((M, M, M)).astype(np.float32))
+        for g in widths:
+            for spec in (ROW_MAJOR, MORTON, HILBERT):
+                data = apply_ordering(cube, spec)
+
+                @jax.jit
+                def pack_all(d, spec=spec, M=M, g=g):
+                    return [pack_surface(d, spec, M, g, f)
+                            for pair in FACE_GROUPS for f in pair]
+
+                jax.block_until_ready(pack_all(data))  # compile
+                t0 = time.perf_counter()
+                for _ in range(N_REPS):
+                    bufs = pack_all(data)
+                jax.block_until_ready(bufs)
+                dt = (time.perf_counter() - t0) / N_REPS
+                runs = {PAPER_SURFACE_NAMES[f]: run_stats(spec, M, g, f).n_runs
+                        for pair in FACE_GROUPS for f in pair}
+                out.append((f"fig11_15/pack_M{M}_g{g}_{spec.name}", dt * 1e6,
+                            "dma_runs=" + ",".join(f"{k}:{v}"
+                                                   for k, v in runs.items())))
+    return out

@@ -1,0 +1,68 @@
+"""§Roofline: aggregate the dry-run JSON records into the per-cell table.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits one row per (arch × shape × mesh): the three roofline terms, the
+bottleneck, MODEL_FLOPS/HLO_FLOPs, and the MFU bound.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+# final (optimized) build artefacts; experiments/dryrun holds the
+# original baseline records for the §Perf before/after comparison.
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun_final")
+if not os.path.isdir(DRYRUN_DIR):  # fall back to baseline records
+    DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                              "dryrun")
+
+
+def load_records(tag: str | None = None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        name = os.path.splitext(os.path.basename(p))[0]
+        is_tagged = "#" in name
+        if tag is None and is_tagged:
+            continue
+        if tag is not None and not name.endswith(tag):
+            continue
+        recs.append(r)
+    return recs
+
+
+def rows():
+    out = []
+    for r in load_records():
+        name = f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}"
+        t_us = r["t_bound_s"] * 1e6
+        out.append((name, t_us,
+                    f"bottleneck={r['bottleneck']};"
+                    f"t_comp_ms={r['t_compute_s']*1e3:.2f};"
+                    f"t_mem_ms={r['t_memory_s']*1e3:.2f};"
+                    f"t_coll_ms={r['t_collective_s']*1e3:.2f};"
+                    f"useful={r['useful_flops_frac']:.2f};"
+                    f"mfu_bound={r['mfu_bound']:.3f}"))
+    return out
+
+
+def markdown_table(recs=None) -> str:
+    recs = recs if recs is not None else load_records()
+    lines = ["| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | "
+             "bottleneck | useful | MFU-bound |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh'].split('_')[0]} | "
+            f"{r['t_compute_s']*1e3:.2f} | {r['t_memory_s']*1e3:.2f} | "
+            f"{r['t_collective_s']*1e3:.2f} | {r['bottleneck']} | "
+            f"{r['useful_flops_frac']:.2f} | {r['mfu_bound']:.2%} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

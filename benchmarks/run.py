@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Modules:
+  offset_hist     — Figs 5-7  (offset histograms)
+  cache_misses    — Figs 16-20 (surface miss counts, model)
+  stencil_update  — Figs 8-10/12-14 (update timings)
+  halo_pack       — Figs 11/15 (pack timings + DMA runs)
+  kernel_bench    — Pallas schedules scored by the paper's LRU model
+  roofline_table  — §Roofline rows from the dry-run artefacts
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (cache_misses, halo_pack, kernel_bench, offset_hist,
+                   roofline_table, stencil_update)
+
+    fast = "--fast" in sys.argv
+    print("name,us_per_call,derived")
+    sections = [
+        offset_hist.rows(),
+        cache_misses.rows(M=32 if fast else 64),
+        stencil_update.rows(sizes=(32,) if fast else (32, 64),
+                            stencils=(1,) if fast else (1, 2)),
+        halo_pack.rows(sizes=(32,) if fast else (32, 64),
+                       widths=(1,) if fast else (1, 2)),
+        kernel_bench.rows(),
+        roofline_table.rows(),
+    ]
+    for rows in sections:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

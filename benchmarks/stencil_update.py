@@ -1,0 +1,39 @@
+"""Paper Figs 8–10 / 12–14: time per grid-value update for 10 iterations.
+
+gol3d with orderings ∈ {row-major, Morton, Hilbert}, stencil g ∈ {1, 2},
+M ∈ {32, 64} (the paper's 64–256 scaled to this container's single CPU
+core; the ordering *comparison* is the object, not absolute time).
+Times the jit'd SFC-blocked update pipeline end-to-end.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import HILBERT, MORTON, ROW_MAJOR
+from repro.stencil import Gol3d, Gol3dConfig
+
+N_ITERS = 10
+
+
+def rows(sizes=(32, 64), stencils=(1, 2)):
+    out = []
+    for M in sizes:
+        for g in stencils:
+            for spec in (ROW_MAJOR, MORTON, HILBERT):
+                app = Gol3d(Gol3dConfig(M=M, g=g, ordering=spec, block_T=8))
+                step = app.step_fn()
+                s = step(app.state_path)  # compile + warm
+                s = jax.block_until_ready(s)
+                t0 = time.perf_counter()
+                for _ in range(N_ITERS):
+                    s = step(s)
+                jax.block_until_ready(s)
+                dt = time.perf_counter() - t0
+                per_item_ns = dt / N_ITERS / (M ** 3) * 1e9
+                out.append((f"fig8_14/update_M{M}_g{g}_{spec.name}",
+                            dt * 1e6 / N_ITERS,
+                            f"ns_per_item={per_item_ns:.2f}"))
+    return out

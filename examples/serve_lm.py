@@ -1,0 +1,59 @@
+"""Batched serving demo: prefill + greedy decode over concurrent requests.
+
+Builds a reduced gemma3-family model (sliding-window + global layers —
+the long-context serving case), loads a batch of prompts, and decodes
+new tokens for all requests in lockstep with a preallocated KV cache
+(the shape-stable regime a continuous-batching server runs in).
+
+Run: PYTHONPATH=src python examples/serve_lm.py [--new-tokens 32]
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import greedy_decode
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("gemma3-1b"), n_layers=6, d_model=256, n_heads=4,
+        n_kv_heads=1, head_dim=64, d_ff=512, vocab=4096, sliding_window=32,
+        global_every=3, activation_dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"[serve_lm] {model.n_params()/1e6:.1f}M-param gemma3-family model, "
+          f"{args.batch} concurrent requests")
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len), np.int32))
+    max_len = args.prompt_len + args.new_tokens + 1
+    t0 = time.perf_counter()
+    out = greedy_decode(model, params, prompts, args.new_tokens, max_len)
+    out = jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    total_new = args.batch * args.new_tokens
+    print(f"[serve_lm] decoded {total_new} tokens in {dt:.2f}s "
+          f"({total_new/dt:.1f} tok/s incl. prefill+compile)")
+    for b in range(min(args.batch, 2)):
+        print(f"  req{b}: {np.asarray(out[b])[:12].tolist()} ...")
+    assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+    assert out.shape == (args.batch, args.new_tokens)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

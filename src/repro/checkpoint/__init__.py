@@ -1,0 +1,4 @@
+"""Atomic, manifest-driven, elastic checkpointing."""
+
+from . import ckpt  # noqa: F401
+from .ckpt import save, save_async, wait, restore, latest_step  # noqa: F401

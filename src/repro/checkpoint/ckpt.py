@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing: atomic, manifest-driven, elastic.
+
+Layout of a checkpoint directory::
+
+    <dir>/step_000123/          # finished checkpoints only (atomic rename)
+        manifest.json           # step, data cursor, rng, tree structure,
+                                # leaf shapes/dtypes, shard chunking
+        arrays_00.npz ...       # leaf chunks (bounded file size)
+
+Properties needed at 1000-node scale, realised here at container scale:
+
+- **Atomicity**: writes go to ``<dir>/.tmp_step_X`` and are renamed into
+  place only after fsync — a killed job never leaves a half checkpoint
+  that restore could pick up.
+- **Restart**: ``latest_step``/``restore`` resume bit-exact (optimizer
+  state, data cursor and RNG key live in the manifest).
+- **Elasticity**: leaves are saved as *logical* (unsharded) arrays, so a
+  restore may target any mesh/sharding — the caller passes target
+  shardings and we ``jax.device_put`` per leaf. Changing (data, model)
+  mesh shape between runs is therefore a restore-time concern only.
+- **Async**: ``save_async`` snapshots to host memory synchronously (one
+  device_get) and writes in a background thread, overlapping the next
+  training steps; ``wait`` joins before the next save or exit.
+
+A production deployment would swap the npz writer for per-host sharded
+files + a distributed commit barrier; the manifest/atomic-rename protocol
+is unchanged.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "save_async", "wait", "restore", "latest_step"]
+
+_MAX_CHUNK_BYTES = 1 << 30
+_pending: list[threading.Thread] = []
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    else:
+        yield "/".join(prefix), tree
+
+
+def _unflatten(flat: dict[str, Any]):
+    root: dict = {}
+    for key, v in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+def save(ckpt_dir: str, step: int, tree: dict, *, meta: dict | None = None):
+    """Synchronous atomic save of a pytree-of-arrays."""
+    host = {k: np.asarray(v) for k, v in _flatten(tree)}
+    _write(ckpt_dir, step, host, meta or {})
+
+
+def save_async(ckpt_dir: str, step: int, tree: dict, *, meta: dict | None = None):
+    """Snapshot to host now; write in background."""
+    host = {k: np.asarray(v) for k, v in _flatten(tree)}  # sync device->host
+    t = threading.Thread(target=_write, args=(ckpt_dir, step, host, meta or {}),
+                         daemon=True)
+    t.start()
+    _pending.append(t)
+
+
+def wait():
+    while _pending:
+        _pending.pop().join()
+
+
+def _write(ckpt_dir: str, step: int, host: dict[str, np.ndarray], meta: dict):
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    os.makedirs(tmp, exist_ok=True)
+    # chunk leaves into bounded npz files
+    chunks: list[dict[str, np.ndarray]] = [{}]
+    size = 0
+    index = {}
+    for k, v in host.items():
+        if size > _MAX_CHUNK_BYTES:
+            chunks.append({})
+            size = 0
+        logical_dtype = str(v.dtype)
+        if v.dtype.kind not in "biufc":  # e.g. ml_dtypes bfloat16: npz-unsafe
+            v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
+        chunks[-1][k] = v
+        index[k] = {"file": len(chunks) - 1, "shape": list(v.shape),
+                    "dtype": logical_dtype}
+        size += v.nbytes
+    for i, c in enumerate(chunks):
+        # npz keys cannot contain '/', escape
+        np.savez(os.path.join(tmp, f"arrays_{i:02d}.npz"),
+                 **{k.replace("/", "::"): v for k, v in c.items()})
+    manifest = {"step": step, "index": index, "meta": meta,
+                "n_chunks": len(chunks)}
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):  # overwrite-save of same step
+        import shutil
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None, *,
+            shardings=None) -> tuple[dict, dict]:
+    """Returns (tree, meta). ``shardings``: optional matching pytree of
+    jax.sharding.Sharding — enables elastic restore onto a new mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    import ml_dtypes  # bundled with jax
+
+    loaded: dict[str, np.ndarray] = {}
+    index = manifest["index"]
+    for i in range(manifest["n_chunks"]):
+        with np.load(os.path.join(d, f"arrays_{i:02d}.npz")) as z:
+            for k in z.files:
+                key = k.replace("::", "/")
+                v = z[k]
+                want = index[key]["dtype"]
+                if str(v.dtype) != want:  # un-view non-native dtypes
+                    v = v.view(np.dtype(getattr(ml_dtypes, want)))
+                loaded[key] = v
+    tree = _unflatten(loaded)
+    if shardings is not None:
+        flat_s = dict(_flatten(shardings))
+        tree = _unflatten({
+            k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+            for k, v in _flatten(tree)})
+    return tree, manifest["meta"]

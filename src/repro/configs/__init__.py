@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch + the paper's gol3d."""
+
+from .registry import (  # noqa: F401
+    ARCHS, SHAPES, LONG_OK, get_config, get_smoke, input_specs, cells,
+    shape_skip_reason, concrete_batch,
+)

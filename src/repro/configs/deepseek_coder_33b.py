@@ -1,0 +1,18 @@
+"""deepseek-coder-33b [dense]: llama-arch (arXiv:2401.14196).
+
+62L d_model=7168 56H (GQA kv=8) d_ff=19200 vocab=32256, head_dim=128.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=19200, vocab=32256, head_dim=128,
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-coder-33b-smoke", family="dense",
+    n_layers=3, d_model=128, n_heads=8, n_kv_heads=2,
+    d_ff=320, vocab=512, head_dim=16, activation_dtype="float32",
+)

@@ -1,0 +1,24 @@
+"""deepseek-moe-16b [moe]: fine-grained expert segmentation (arXiv:2401.06066).
+
+28L d_model=2048 16H (GQA kv=16) d_ff=1408(expert) vocab=102400.
+MoE: 2 shared + 64 routed, top-6, first layer dense.
+"""
+
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102400, head_dim=128,
+    moe=MoEConfig(n_routed=64, n_shared=2, top_k=6, d_ff_expert=1408,
+                  first_k_dense=1),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-moe-16b-smoke", family="moe",
+    n_layers=3, d_model=96, n_heads=4, n_kv_heads=4,
+    d_ff=64, vocab=512, head_dim=24,
+    moe=MoEConfig(n_routed=8, n_shared=2, top_k=2, d_ff_expert=64,
+                  first_k_dense=1, capacity_factor=4.0),
+    activation_dtype="float32",
+)

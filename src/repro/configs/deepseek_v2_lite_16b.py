@@ -1,0 +1,31 @@
+"""deepseek-v2-lite-16b [moe]: MLA + fine-grained MoE (arXiv:2405.04434).
+
+27L d_model=2048 16H d_ff=1408(expert) vocab=102400.
+MLA: kv_lora_rank=512, qk_nope=128, qk_rope=64, v=128.
+MoE: 64 routed + 2 shared, top-6, first layer dense.
+
+Note: the assignment line lists both "MoE 64e top-6" and "160 routed";
+160 routed is DeepSeek-V2 (236B), not Lite — we follow the authoritative
+"64e top-6" bracket (see DESIGN.md §4).
+"""
+
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-lite-16b", family="moe",
+    n_layers=27, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=102400, head_dim=128,
+    mla=MLAConfig(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64, v_dim=128),
+    moe=MoEConfig(n_routed=64, n_shared=2, top_k=6, d_ff_expert=1408,
+                  first_k_dense=1),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-v2-lite-16b-smoke", family="moe",
+    n_layers=3, d_model=96, n_heads=4, n_kv_heads=4,
+    d_ff=64, vocab=512, head_dim=24,
+    mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_dim=16),
+    moe=MoEConfig(n_routed=8, n_shared=2, top_k=2, d_ff_expert=64,
+                  first_k_dense=1, capacity_factor=4.0),
+    activation_dtype="float32",
+)

@@ -1,0 +1,23 @@
+"""gemma3-1b [dense]: 5:1 local:global sliding-window (hf:google/gemma-3-1b-pt).
+
+26L d_model=1152 4H (GQA kv=1) d_ff=6912 vocab=262144, head_dim=256,
+window=512, global layer every 6th, global rope theta 1e6.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b", family="dense",
+    n_layers=26, d_model=1152, n_heads=4, n_kv_heads=1,
+    d_ff=6912, vocab=262144, head_dim=256,
+    sliding_window=512, global_every=6,
+    rope_theta=1e4, global_rope_theta=1e6,
+)
+
+SMOKE = ModelConfig(
+    name="gemma3-1b-smoke", family="dense",
+    n_layers=4, d_model=96, n_heads=2, n_kv_heads=1,
+    d_ff=256, vocab=512, head_dim=48,
+    sliding_window=8, global_every=2,
+    rope_theta=1e4, global_rope_theta=1e6, activation_dtype="float32",
+)

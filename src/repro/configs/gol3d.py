@@ -1,0 +1,16 @@
+"""gol3d application configs (the paper's own experiment grid).
+
+Paper §4: problem sizes M ∈ {64, 128, 256}, stencil g ∈ {1..4},
+orderings ∈ {row-major, Morton, Hilbert}, halo widths {1, 2}.
+"""
+
+from repro.core import HILBERT, MORTON, ROW_MAJOR
+from repro.stencil.gol3d import Gol3dConfig
+
+ORDERINGS = (ROW_MAJOR, MORTON, HILBERT)
+PROBLEM_SIZES = (64, 128, 256)
+STENCILS = (1, 2, 3, 4)
+HALO_WIDTHS = (1, 2)
+
+CONFIG = Gol3dConfig(M=64, g=1, ordering=MORTON, block_T=8)
+SMOKE = Gol3dConfig(M=16, g=1, ordering=MORTON, block_T=4)

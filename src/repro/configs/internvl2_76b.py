@@ -1,0 +1,25 @@
+"""internvl2-76b [vlm]: InternViT (stub) + LLaMA-70B-class LM
+(arXiv:2404.16821).
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256, head_dim=128.
+Frontend stubbed per assignment: ``input_specs`` provides 256 precomputed
+ViT patch embeddings (vit_dim=3200, InternViT-6B width) which a learned
+projector maps to d_model and prepends to the token sequence.
+"""
+
+from repro.models.config import ModelConfig, VLMConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=28672, vocab=128256, head_dim=128,
+    vlm=VLMConfig(n_patches=256, vit_dim=3200),
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-76b-smoke", family="vlm",
+    n_layers=3, d_model=96, n_heads=8, n_kv_heads=2,
+    d_ff=256, vocab=512, head_dim=12,
+    vlm=VLMConfig(n_patches=8, vit_dim=48),
+    activation_dtype="float32",
+)

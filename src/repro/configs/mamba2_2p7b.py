@@ -1,0 +1,24 @@
+"""mamba2-2.7b [ssm]: SSD, attention-free (arXiv:2405.21060).
+
+64L d_model=2560, ssm_state=128, head_dim=64 (H=80), expand=2,
+vocab=50280. The paper's SFC technique is inapplicable to the SSD
+recurrence (DESIGN.md §Arch-applicability) — arch implemented without it.
+"""
+
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    vocab_pad_multiple=256,
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=1, n_kv_heads=1, d_ff=0,
+    vocab=50280,
+    ssm=SSMConfig(d_state=128, expand=2, head_dim=64, n_groups=1,
+                  conv_width=4, chunk=256),
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-2.7b-smoke", family="ssm",
+    n_layers=4, d_model=64, n_heads=1, n_kv_heads=1, d_ff=0, vocab=512,
+    ssm=SSMConfig(d_state=16, expand=2, head_dim=16, chunk=8),
+    activation_dtype="float32",
+)

@@ -1,0 +1,18 @@
+"""phi4-mini-3.8b [dense]: RoPE SwiGLU GQA (arXiv:2412.08905).
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064, head_dim=128.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi4-mini-3.8b", family="dense",
+    n_layers=32, d_model=3072, n_heads=24, n_kv_heads=8,
+    d_ff=8192, vocab=200064, head_dim=128,
+)
+
+SMOKE = ModelConfig(
+    name="phi4-mini-3.8b-smoke", family="dense",
+    n_layers=3, d_model=96, n_heads=6, n_kv_heads=2,
+    d_ff=256, vocab=512, head_dim=16, activation_dtype="float32",
+)

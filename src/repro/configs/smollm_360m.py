@@ -1,0 +1,18 @@
+"""smollm-360m [dense]: llama-arch small (hf:HuggingFaceTB/SmolLM family).
+
+32L d_model=960 15H (GQA kv=5) d_ff=2560 vocab=49152, head_dim=64.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-360m", family="dense",
+    n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+    d_ff=2560, vocab=49152, head_dim=64, rope_theta=1e4,
+)
+
+SMOKE = ModelConfig(
+    name="smollm-360m-smoke", family="dense",
+    n_layers=3, d_model=96, n_heads=3, n_kv_heads=1,
+    d_ff=256, vocab=512, head_dim=32, activation_dtype="float32",
+)

@@ -1,0 +1,26 @@
+"""whisper-small [audio]: enc-dec backbone, conv frontend stubbed
+(arXiv:2212.04356).
+
+12L(dec)+12L(enc) d_model=768 12H d_ff=3072 vocab=51865; encoder sees
+1500 precomputed frame embeddings (``input_specs`` provides them).
+Decoder uses RoPE instead of whisper's learned 448-position table so the
+assigned 32k stress shapes are well-defined (DESIGN.md §4).
+"""
+
+from repro.models.config import EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    vocab_pad_multiple=256,
+    name="whisper-small", family="encdec",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_ff=3072, vocab=51865, head_dim=64,
+    encdec=EncDecConfig(n_enc_layers=12, n_frames=1500),
+)
+
+SMOKE = ModelConfig(
+    name="whisper-small-smoke", family="encdec",
+    n_layers=2, d_model=96, n_heads=4, n_kv_heads=4,
+    d_ff=256, vocab=512, head_dim=24,
+    encdec=EncDecConfig(n_enc_layers=2, n_frames=16),
+    activation_dtype="float32",
+)

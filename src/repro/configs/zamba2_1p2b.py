@@ -1,0 +1,28 @@
+"""zamba2-1.2b [hybrid]: Mamba2 backbone + shared attention blocks
+(arXiv:2411.15242).
+
+38L d_model=2048, ssm_state=64, head_dim=64 (H=64), expand=2;
+one weight-shared GQA block (32H, d_ff=8192) applied every 6 layers.
+vocab=32000.
+"""
+
+from repro.models.config import HybridConfig, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    n_layers=38, d_model=2048, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32000,
+    ssm=SSMConfig(d_state=64, expand=2, head_dim=64, n_groups=1,
+                  conv_width=4, chunk=256),
+    hybrid=HybridConfig(period=6, shared_d_ff=8192, shared_n_heads=32,
+                        shared_n_kv_heads=32),
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-1.2b-smoke", family="hybrid",
+    n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab=512,
+    ssm=SSMConfig(d_state=16, expand=2, head_dim=16, chunk=8),
+    hybrid=HybridConfig(period=2, shared_d_ff=128, shared_n_heads=4,
+                        shared_n_kv_heads=4),
+    activation_dtype="float32",
+)

@@ -1,0 +1,22 @@
+"""Core: space-filling-curve orderings, cache model, layouts (the paper's contribution)."""
+
+from .orderings import (  # noqa: F401
+    OrderingSpec, ROW_MAJOR, COLUMN_MAJOR, MORTON, HILBERT,
+    rmo_to_path, path_to_rmo, path_index_2d, ordering_from_name,
+)
+from .morton import (  # noqa: F401
+    morton_encode3, morton_decode3, morton_encode2, morton_decode2,
+    morton_encode3_level, morton_decode3_level,
+)
+from .hilbert import hilbert_encode3, hilbert_decode3, hilbert_encode, hilbert_decode  # noqa: F401
+from .cache_model import (  # noqa: F401
+    offset_histogram, offset_summary, cache_misses, surface_cache_misses,
+    simulate_lru, stencil_offsets,
+)
+from .surfaces import (  # noqa: F401
+    FACES, PAPER_SURFACE_NAMES, surface_path_indices, run_stats, surface_runs,
+)
+from .layout import (  # noqa: F401
+    apply_ordering, undo_ordering, blockize, unblockize, blockize_with_halo,
+    block_order,
+)

@@ -1,0 +1,107 @@
+"""JAX relayout operations: apply an ordering to real arrays.
+
+These are the executable counterparts of core/orderings.py — pure-JAX
+gathers with *static* (numpy, trace-time) permutations, so XLA sees plain
+gathers/reshapes and can fuse them.
+
+The TPU-native form stores the cube as ``(n_blocks, T, T, T)`` with blocks
+ordered along the curve (DESIGN.md §2): the curve ordering is then a
+property of the memory layout, exactly as in the paper, and a Pallas
+kernel that walks blocks sequentially walks HBM contiguously.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from .orderings import OrderingSpec, path_to_rmo, rmo_to_path, _check_pow2, _flat_index
+
+__all__ = [
+    "apply_ordering", "undo_ordering",
+    "block_order", "blockize", "unblockize", "blockize_with_halo",
+]
+
+
+def apply_ordering(x: jnp.ndarray, spec: OrderingSpec) -> jnp.ndarray:
+    """Reorder an (M,M,M) cube into a flat (M³,) path-ordered vector."""
+    M = x.shape[0]
+    assert x.shape == (M, M, M), x.shape
+    q = path_to_rmo(spec, M)  # path pos -> rmo
+    return x.reshape(-1)[q]
+
+
+def undo_ordering(v: jnp.ndarray, spec: OrderingSpec, M: int) -> jnp.ndarray:
+    """Inverse of :func:`apply_ordering`."""
+    p = rmo_to_path(spec, M)  # rmo -> path pos
+    return v[p].reshape(M, M, M)
+
+
+@functools.lru_cache(maxsize=64)
+def block_order(kind: str, nt: int) -> np.ndarray:
+    """Order of T³-tile *block coordinates* along a curve.
+
+    Returns (nt³, 3) int array: row t holds the (bk,bi,bj) visited at path
+    position t by ordering ``kind`` over the nt×nt×nt block grid.
+    """
+    _check_pow2(nt)
+    kk, ii, jj = np.meshgrid(*(np.arange(nt, dtype=np.uint64),) * 3, indexing="ij")
+    kk, ii, jj = kk.ravel(), ii.ravel(), jj.ravel()
+    pidx = _flat_index(kind, kk, ii, jj, nt).astype(np.int64)
+    out = np.empty((nt ** 3, 3), dtype=np.int64)
+    out[pidx, 0] = kk
+    out[pidx, 1] = ii
+    out[pidx, 2] = jj
+    out.setflags(write=False)
+    return out
+
+
+def blockize(x: jnp.ndarray, T: int, kind: str = "morton") -> jnp.ndarray:
+    """(M,M,M) -> (nb, T, T, T) with blocks in ``kind`` curve order."""
+    M = x.shape[0]
+    nt = M // T
+    assert nt * T == M
+    bo = block_order(kind, nt)
+    x6 = x.reshape(nt, T, nt, T, nt, T).transpose(0, 2, 4, 1, 3, 5)  # (nt,nt,nt,T,T,T)
+    flat = x6.reshape(nt ** 3, T, T, T)
+    lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
+    return flat[lin]
+
+
+def unblockize(blocks: jnp.ndarray, M: int, kind: str = "morton") -> jnp.ndarray:
+    """Inverse of :func:`blockize`."""
+    nb, T = blocks.shape[0], blocks.shape[1]
+    nt = M // T
+    assert nb == nt ** 3
+    bo = block_order(kind, nt)
+    lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
+    inv = np.empty(nb, dtype=np.int64)
+    inv[lin] = np.arange(nb)
+    x6 = blocks[inv].reshape(nt, nt, nt, T, T, T).transpose(0, 3, 1, 4, 2, 5)
+    return x6.reshape(M, M, M)
+
+
+def blockize_with_halo(x: jnp.ndarray, T: int, g: int, kind: str = "morton",
+                       periodic: bool = True) -> jnp.ndarray:
+    """(M,M,M) -> (nb, T+2g, T+2g, T+2g), curve-ordered, halos included.
+
+    This is the pack step feeding kernels/stencil3d.py: each block carries
+    its own halo so the kernel needs no neighbour communication. Halo
+    duplication factor is ((T+2g)/T)³.
+    """
+    M = x.shape[0]
+    nt = M // T
+    assert nt * T == M
+    mode = "wrap" if periodic else "edge"
+    xp = jnp.pad(x, g, mode=mode)
+    bo = block_order(kind, nt)
+    # static window gather: start offsets per block
+    starts = bo * T  # in padded coords the halo window starts at bo*T
+    w = T + 2 * g
+    rng = np.arange(w)
+    kk = starts[:, 0][:, None] + rng[None, :]           # (nb, w)
+    ii = starts[:, 1][:, None] + rng[None, :]
+    jj = starts[:, 2][:, None] + rng[None, :]
+    return xp[kk[:, :, None, None], ii[:, None, :, None], jj[:, None, None, :]]

@@ -1,0 +1,95 @@
+"""Surface (face) index lists for halo pack/unpack (paper §3.2, §4).
+
+The paper packs each of the six width-``g`` faces of the cube into a
+contiguous buffer using *precomputed lists of path indices* (one initial
+traversal, memory cost 6gM² integers). This module builds those lists for
+any ordering, plus run-length statistics that quantify how contiguous the
+pack reads are — the structural quantity behind Figs 11/15: row-major
+layouts read the sr faces at stride M² (runs of length 1) while SFC
+layouts read every face in runs of whole curve blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+from .cache_model import face_mask
+from .orderings import OrderingSpec, rmo_to_path
+
+__all__ = ["FACES", "PAPER_SURFACE_NAMES", "surface_path_indices",
+           "run_lengths", "RunStats", "run_stats", "surface_runs"]
+
+FACES = ("k0", "k1", "i0", "i1", "j0", "j1")
+
+# paper's surface naming (Figs 11/15): rc = row-column, cs = column-slab,
+# sr = slab-row; F/B = front/back.
+PAPER_SURFACE_NAMES = {
+    "k0": "rcF", "k1": "rcB",
+    "i0": "csF", "i1": "csB",
+    "j0": "srF", "j1": "srB",
+}
+
+
+@functools.lru_cache(maxsize=256)
+def surface_path_indices(spec: OrderingSpec, M: int, g: int, face: str) -> np.ndarray:
+    """Path indices (positions in the ordering) of one face, ascending.
+
+    Ascending path order == the order in which the curve visits the face,
+    which is the pack order used by the paper (p_t in §3.2). Length gM².
+    """
+    p = rmo_to_path(spec, M)
+    idx = p[face_mask(face, M, g)]
+    idx = np.sort(idx)
+    idx.setflags(write=False)
+    return idx
+
+
+def run_lengths(sorted_idx: np.ndarray) -> np.ndarray:
+    """Lengths of maximal runs of consecutive integers in a sorted array."""
+    if sorted_idx.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    breaks = np.flatnonzero(np.diff(sorted_idx) != 1)
+    starts = np.concatenate([[0], breaks + 1])
+    ends = np.concatenate([breaks + 1, [sorted_idx.size]])
+    return (ends - starts).astype(np.int64)
+
+
+@dataclass(frozen=True)
+class RunStats:
+    face: str
+    paper_name: str
+    n_elems: int
+    n_runs: int
+    mean_run: float
+    min_run: int
+    max_run: int
+
+
+def run_stats(spec: OrderingSpec, M: int, g: int, face: str) -> RunStats:
+    idx = surface_path_indices(spec, M, g, face)
+    rl = run_lengths(idx)
+    return RunStats(
+        face=face, paper_name=PAPER_SURFACE_NAMES[face],
+        n_elems=int(idx.size), n_runs=int(rl.size),
+        mean_run=float(rl.mean()) if rl.size else 0.0,
+        min_run=int(rl.min()) if rl.size else 0,
+        max_run=int(rl.max()) if rl.size else 0,
+    )
+
+
+def surface_runs(spec: OrderingSpec, M: int, g: int, face: str):
+    """(starts, lengths) of contiguous path-index runs for one face.
+
+    This is the compressed form of the paper's precomputed index lists:
+    a pack is then ``concatenate(data[start:start+len] for runs)`` — each
+    run is one contiguous DMA on TPU (kernels/sfc_gather.py).
+    """
+    idx = surface_path_indices(spec, M, g, face)
+    rl = run_lengths(idx)
+    ends = np.cumsum(rl)
+    starts_in_list = ends - rl
+    starts = idx[starts_in_list]
+    return starts.astype(np.int64), rl

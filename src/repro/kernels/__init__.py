@@ -1,0 +1,15 @@
+"""Pallas TPU kernels (interpret-validated) + jnp oracles.
+
+- stencil3d.py  — SFC-blocked 3D weighted stencil (paper's compute loop)
+- sfc_gather.py — scalar-prefetched row gather (paper's pack primitive)
+- flash_attn.py — flash attention with Morton/Hilbert block schedule
+- ops.py        — public jit'd wrappers (kernel or jnp-ref selectable)
+- ref.py        — pure-jnp oracles
+"""
+
+from .ops import (  # noqa: F401
+    gol3d_step, pack_surface, unpack_surface, flash_attention, sfc_gather_take,
+)
+from .stencil3d import stencil_sum_blocks  # noqa: F401
+from .sfc_gather import gather_rows  # noqa: F401
+from .flash_attn import flash_attention_fwd, build_schedule  # noqa: F401

@@ -1,0 +1,157 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Every op has an exact pure-jnp fallback (ref.py) selected by
+``use_kernel=False`` — the default model/stencil code paths run the
+fallback on CPU (interpret-mode kernels are functionally identical but
+slow), and flip to the kernels on TPU deployment via config.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import blockize_with_halo, unblockize
+from repro.core.orderings import OrderingSpec
+from repro.core.surfaces import surface_path_indices
+
+from . import ref
+from .flash_attn import flash_attention_fwd
+from .sfc_gather import gather_rows
+from .stencil3d import stencil_sum_blocks
+
+__all__ = ["gol3d_step", "pack_surface", "unpack_surface",
+           "flash_attention", "sfc_gather_take"]
+
+
+def _uniform_weights(g: int) -> jnp.ndarray:
+    """All-ones stencil with a zero centre (neighbour count)."""
+    s = 2 * g + 1
+    w = np.ones((s, s, s), dtype=np.float32)
+    w[g, g, g] = 0.0
+    return jnp.asarray(w)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "block_kind", "T", "use_kernel", "interpret"))
+def gol3d_step(cube: jnp.ndarray, *, g: int, T: int = 8,
+               block_kind: str = "morton", use_kernel: bool = False,
+               interpret: bool = True) -> jnp.ndarray:
+    """One gol3d update via the SFC-blocked stencil pipeline.
+
+    blockize_with_halo (SFC layout) → stencil kernel → rule → unblockize.
+    Semantically identical to ref.gol3d_step_ref (periodic boundaries).
+    """
+    M = cube.shape[0]
+    blocks = blockize_with_halo(cube, T, g, kind=block_kind, periodic=True)
+    if use_kernel:
+        neigh = stencil_sum_blocks(blocks, _uniform_weights(g), g=g,
+                                   interpret=interpret)
+    else:
+        neigh = ref.stencil_sum_ref(blocks, _uniform_weights(g))
+    centre = blocks[:, g:g + T, g:g + T, g:g + T]
+    nxt = ref.gol_rule_ref(centre, neigh, g)
+    return unblockize(nxt, M, kind=block_kind)
+
+
+def sfc_gather_take(data: jnp.ndarray, idx: np.ndarray, *, line: int = 64,
+                    use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """data[idx] for a flat array, via line-granularity kernel gather.
+
+    Kernel path: fetch the unique ``line``-sized rows covering ``idx``
+    (one scalar-prefetched DMA each), then select elements. The row count
+    is the modelled HBM traffic — SFC layouts need fewer rows (paper
+    Figs 11/15 re-expressed). Exact for any idx.
+    """
+    idx = np.asarray(idx)
+    if not use_kernel:
+        return jnp.take(data, jnp.asarray(idx))
+    n = data.shape[0]
+    assert n % line == 0, (n, line)
+    rows = np.unique(idx // line).astype(np.int32)
+    pos = np.searchsorted(rows, idx // line) * line + (idx % line)
+    got = gather_rows(data.reshape(n // line, line), jnp.asarray(rows),
+                      interpret=interpret)
+    return got.reshape(-1)[jnp.asarray(pos)]
+
+
+def pack_surface(data_path: jnp.ndarray, spec: OrderingSpec, M: int, g: int,
+                 face: str, *, line: int = 64, use_kernel: bool = False,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Pack one face of a path-ordered cube into a contiguous buffer.
+
+    ``data_path`` is the (M³,) cube in ``spec`` order (apply_ordering).
+    Buffer order is curve-visit order p_t (paper §3.2).
+    """
+    idx = surface_path_indices(spec, M, g, face)
+    return sfc_gather_take(data_path, idx, line=line, use_kernel=use_kernel,
+                           interpret=interpret)
+
+
+def unpack_surface(data_path: jnp.ndarray, buf: jnp.ndarray,
+                   spec: OrderingSpec, M: int, g: int, face: str) -> jnp.ndarray:
+    """Inverse of pack_surface: scatter a buffer back into the cube."""
+    idx = surface_path_indices(spec, M, g, face)
+    return data_path.at[jnp.asarray(idx)].set(buf)
+
+
+# ----------------------------------------------------------------------
+# Flash attention public API (GQA folding + trainable custom_vjp)
+# ----------------------------------------------------------------------
+
+def _fold_gqa(q, k, v):
+    """(B,Hq,S,D)/(B,Hkv,S,D) -> (B*Hq, S, D) with kv repeated per group."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    return (q.reshape(B * Hq, Sq, D), k.reshape(B * Hq, -1, D),
+            v.reshape(B * Hq, -1, D))
+
+
+def _pick_block(s: int, pref: int) -> int:
+    b = min(pref, s)
+    while s % b:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, schedule: str = "morton",
+                    block_q: int = 64, block_k: int = 64):
+    """Trainable flash attention. q: (B,Hq,S,D); k,v: (B,Hkv,Sk,D).
+
+    Forward runs the SFC-scheduled Pallas kernel; backward recomputes
+    through the jnp oracle (standard recompute-bwd, keeps the kernel
+    forward-only).
+    """
+    B, Hq, Sq, D = q.shape
+    qf, kf, vf = _fold_gqa(q, k, v)
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(kf.shape[1], block_k)
+    o = flash_attention_fwd(qf, kf, vf, causal=causal, block_q=bq,
+                            block_k=bk, schedule=schedule, interpret=True)
+    return o.reshape(B, Hq, Sq, D)
+
+
+def _fa_fwd(q, k, v, causal, schedule, block_q, block_k):
+    return flash_attention(q, k, v, causal, schedule, block_q, block_k), (q, k, v)
+
+
+def _fa_bwd(causal, schedule, block_q, block_k, res, g_out):
+    q, k, v = res
+
+    def ref_fn(q, k, v):
+        B, Hq, Sq, D = q.shape
+        qf, kf, vf = _fold_gqa(q, k, v)
+        return ref.attention_ref(qf, kf, vf, causal=causal).reshape(B, Hq, Sq, D)
+
+    _, vjp = jax.vjp(ref_fn, q, k, v)
+    return vjp(g_out)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

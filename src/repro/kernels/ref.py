@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["stencil_sum_ref", "gol_rule_ref", "gol3d_step_ref",
+           "gather_rows_ref", "attention_ref"]
+
+
+def stencil_sum_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted (2g+1)³ stencil over halo-extended blocks.
+
+    blocks:  (nb, T+2g, T+2g, T+2g)
+    weights: (2g+1, 2g+1, 2g+1)
+    returns: (nb, T, T, T) — acc[b, z] = sum_d w[d] * blocks[b, z+d]
+    """
+    s = weights.shape[0]
+    g = (s - 1) // 2
+    T = blocks.shape[1] - 2 * g
+    acc = jnp.zeros((blocks.shape[0], T, T, T), dtype=jnp.float32)
+    for dk in range(s):
+        for di in range(s):
+            for dj in range(s):
+                acc = acc + weights[dk, di, dj].astype(jnp.float32) * (
+                    blocks[:, dk:dk + T, di:di + T, dj:dj + T].astype(jnp.float32))
+    return acc
+
+
+def gol_rule_ref(state: jnp.ndarray, neigh_sum: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Generalised Game-of-Life rule (paper's gol3d, stencil radius g).
+
+    With n = (2g+1)³ - 1 neighbours, thresholds scale with the classic
+    2D 8-neighbour rule: survive in [2,3]·n/8, born at exactly round(3n/8).
+    For g=1 (n=26): survive 6..9, born 9 — a standard 3D GoL variant.
+    """
+    n = (2 * g + 1) ** 3 - 1
+    lo = (2 * n) // 8
+    hi = (3 * n) // 8
+    born = hi
+    alive = state > 0.5
+    s = neigh_sum
+    nxt = jnp.where(alive, (s >= lo) & (s <= hi), s == born)
+    return nxt.astype(state.dtype)
+
+
+def gol3d_step_ref(cube: jnp.ndarray, g: int, periodic: bool = True) -> jnp.ndarray:
+    """One gol3d update on an (M,M,M) cube in canonical row-major layout."""
+    s = 2 * g + 1
+    mode = "wrap" if periodic else "constant"
+    xp = jnp.pad(cube, g, mode=mode) if periodic else jnp.pad(cube, g)
+    M = cube.shape[0]
+    total = jnp.zeros_like(cube, dtype=jnp.float32)
+    for dk in range(s):
+        for di in range(s):
+            for dj in range(s):
+                total = total + xp[dk:dk + M, di:di + M, dj:dj + M].astype(jnp.float32)
+    neigh = total - cube.astype(jnp.float32)  # exclude centre
+    return gol_rule_ref(cube, neigh, g)
+
+
+def gather_rows_ref(src: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """src: (N, L); idx: (R,) int32 -> (R, L)."""
+    return jnp.take(src, idx, axis=0)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Dense softmax attention oracle. q,k,v: (BH, S, D) (heads pre-folded)."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / np.sqrt(d)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        # align causal diagonal to the END (supports Sk > Sq: decode w/ cache)
+        offs = sk - sq
+        mask = np.tril(np.ones((sq, sk), dtype=bool), k=offs)
+        s = jnp.where(mask[None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

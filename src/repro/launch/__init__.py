@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
+
+from .mesh import (  # noqa: F401
+    make_production_mesh, hilbert_device_permutation, batch_axes,
+)

@@ -1,0 +1,11 @@
+"""LM substrate: configs, layers, attention variants, MoE, SSD, assembly."""
+
+from .config import (  # noqa: F401
+    ModelConfig, MLAConfig, MoEConfig, SSMConfig, HybridConfig,
+    EncDecConfig, VLMConfig,
+)
+from .zoo import Model, build_model  # noqa: F401
+from .params import (  # noqa: F401
+    ParamDef, init_params, abstract_params, partition_specs, count_params,
+    LOGICAL_RULES,
+)

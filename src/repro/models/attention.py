@@ -1,0 +1,258 @@
+"""Attention variants: GQA (+ sliding window), MLA; full-seq and decode.
+
+Memory discipline: the full-sequence path never materialises an (S,S)
+score tensor for long sequences — queries are processed in chunks under
+``lax.scan`` (blockwise attention; O(C·S) live scores). Masks are
+computed per chunk from positions, so the 32k prefill shapes fit the
+dry-run memory analysis. The SFC-scheduled Pallas kernel
+(kernels/flash_attn.py) is the TPU-deploy alternative for the same path
+(``cfg.use_flash_kernel``); the jnp form is what GSPMD shards.
+
+gemma3's 5:1 local:global pattern runs as ONE scanned layer stack: the
+per-layer boolean ``is_global`` is a scan input selecting between the
+windowed and full mask (and between the two RoPE bases) — no unrolling,
+single attention pass per layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import flash_attention
+
+from .config import ModelConfig
+from .layers import apply_rope, causal_window_mask, rope_freqs
+
+__all__ = ["masked_sdpa", "gqa_attention", "gqa_decode", "mla_attention",
+           "mla_decode", "rope_with_freqs", "select_freqs"]
+
+_NEG = -1e30
+_Q_CHUNK = 1024
+_CHUNK_THRESHOLD = 4096
+
+
+def rope_with_freqs(x, pos, freqs):
+    """Rotary with explicit (possibly per-layer-selected) frequencies."""
+    ang = pos[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def select_freqs(cfg: ModelConfig, is_global, hd: int | None = None):
+    hd = hd or cfg.hd
+    f_loc = jnp.asarray(rope_freqs(hd, cfg.rope_theta))
+    f_glb = jnp.asarray(rope_freqs(hd, cfg.global_rope_theta))
+    if cfg.sliding_window is None:
+        return f_loc
+    return jnp.where(is_global, f_glb, f_loc)
+
+
+def _mask_for(posq, posk, window, is_global, causal=True):
+    """(Sq,Sk) mask; window applies only when is_global is False."""
+    if not causal:
+        return jnp.ones((posq.shape[0], posk.shape[0]), bool)
+    m = causal_window_mask(posq, posk, None)
+    if window is not None:
+        mloc = causal_window_mask(posq, posk, window)
+        if is_global is None:
+            m = mloc
+        else:
+            m = jnp.where(is_global, m, mloc)
+    return m
+
+
+def masked_sdpa(q, k, v, posq, posk, *, window=None, is_global=None,
+                causal=True, q_chunk: int = _Q_CHUNK, score_spec=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,KV,hd) -> (B,Sq,H,hd). f32 softmax.
+
+    For Sq > threshold, scans q in chunks so live scores are O(C·Sk).
+    ``score_spec`` pins the (B,H,Sq,Sk) score sharding (decode with a
+    sequence-sharded cache: distributed partial softmax).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+
+    def blk(qc, pq):
+        """Grouped-GQA attention. Two HBM-traffic rules (both are what the
+        MXU does natively): (1) queries reshaped to (KV, rep) groups so
+        K/V are never materialised H/KV×; (2) score/output einsums take
+        bf16 operands with f32 ACCUMULATION (preferred_element_type) —
+        never cast the cache itself to f32 (XLA would carry a duplicate
+        f32 cache through the decode loop)."""
+        C = qc.shape[1]
+        m = _mask_for(pq, posk, window, is_global, causal)
+        qg = qc.reshape(B, C, KV, rep, hd)
+        s = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k,
+                       preferred_element_type=jnp.float32) / np.sqrt(hd)
+        s = jnp.where(m[None, None, None], s, _NEG)
+        if score_spec is not None:
+            from jax.sharding import PartitionSpec as P
+            bspec, _, qspec, kspec = score_spec
+            s = jax.lax.with_sharding_constraint(
+                s, P(bspec, None, None, qspec, kspec))
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.reshape(B, C, H, hd).astype(v.dtype)
+
+    if Sq <= _CHUNK_THRESHOLD or Sq % q_chunk:
+        return blk(q, posq)
+    nq = Sq // q_chunk
+    qr = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pr = posq.reshape(nq, q_chunk)
+
+    def scan_fn(_, inp):
+        qc, pq = inp
+        return None, blk(qc, pq)
+
+    _, ob = jax.lax.scan(scan_fn, None, (qr, pr))
+    return ob.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _proj_qkv(p, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype)).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype)).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def gqa_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                  is_global=None, pos: jnp.ndarray | None = None,
+                  causal: bool = True) -> jnp.ndarray:
+    """Full-sequence GQA (train/prefill). x: (B,S,D)."""
+    B, S, D = x.shape
+    q, k, v = _proj_qkv(p, x, cfg)
+    if pos is None:
+        pos = jnp.arange(S)
+    freqs = select_freqs(cfg, is_global)
+    q = rope_with_freqs(q, pos, freqs)
+    k = rope_with_freqs(k, pos, freqs)
+    if cfg.use_flash_kernel and causal and cfg.sliding_window is None:
+        o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), True, cfg.flash_schedule,
+                            128, 128).transpose(0, 2, 1, 3)
+    else:
+        o = masked_sdpa(q, k, v, pos, pos, window=cfg.sliding_window,
+                        is_global=is_global, causal=causal)
+    o = o.reshape(B, S, cfg.n_heads * cfg.hd)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def gqa_decode(p: dict, x: jnp.ndarray, cache: dict, cur: jnp.ndarray,
+               cfg: ModelConfig, *, is_global=None):
+    """Single-token decode, one pass (mask/rope selected by flag)."""
+    B = x.shape[0]
+    q, k, v = _proj_qkv(p, x, cfg)
+    posq = jnp.full((1,), cur, jnp.int32)
+    freqs = select_freqs(cfg, is_global)
+    q = rope_with_freqs(q, posq, freqs)
+    k = rope_with_freqs(k, posq, freqs)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, cur, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, cur, 0, 0))
+    posk = jnp.arange(ck.shape[1])
+    o = masked_sdpa(q, ck, cv, posq, posk, window=cfg.sliding_window,
+                    is_global=is_global, score_spec=cfg.score_spec)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": ck, "v": cv}
+
+
+# ----------------------------------------------------------------------
+# MLA (DeepSeek-V2): compressed KV latent cache
+# ----------------------------------------------------------------------
+
+def _mla_parts(p, x, cfg: ModelConfig):
+    mla = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    nope, rope = mla.qk_nope_dim, mla.qk_rope_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = q.reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    dkv = jnp.einsum("bsd,dh->bsh", x, p["w_dkv"].astype(x.dtype))
+    c_kv, k_rope = dkv[..., :mla.kv_lora_rank], dkv[..., mla.kv_lora_rank:]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p, q_nope, q_rope, c_kv, k_rope, posq, posk, cfg,
+                q_chunk: int = _Q_CHUNK):
+    """Blockwise attention through the latent cache."""
+    mla = cfg.mla
+    B, Sk = c_kv.shape[:2]
+    Sq = q_nope.shape[1]
+    H = cfg.n_heads
+    nope, rope, vd = mla.qk_nope_dim, mla.qk_rope_dim, mla.v_dim
+    q_rope = rope_with_freqs(q_rope, posq, jnp.asarray(
+        rope_freqs(rope, cfg.rope_theta)))
+    k_rope = rope_with_freqs(k_rope[..., None, :], posk, jnp.asarray(
+        rope_freqs(rope, cfg.rope_theta)))[..., 0, :]
+    k_nope = jnp.einsum("bsc,ch->bsh", c_kv, p["w_uk"].astype(c_kv.dtype))
+    k_nope = k_nope.reshape(B, Sk, H, nope)
+    v = jnp.einsum("bsc,ch->bsh", c_kv, p["w_uv"].astype(c_kv.dtype))
+    v = v.reshape(B, Sk, H, vd)
+    scale = 1.0 / np.sqrt(nope + rope)
+
+    def blk(qn, qr, pq):
+        s = (jnp.einsum("bqhd,bkhd->bhqk", qn, k_nope,
+                        preferred_element_type=jnp.float32)
+             + jnp.einsum("bqhd,bkd->bhqk", qr, k_rope,
+                          preferred_element_type=jnp.float32)) * scale
+        m = causal_window_mask(pq, posk, None)
+        s = jnp.where(m[None, None], s, _NEG)
+        if Sq == 1 and cfg.score_spec is not None:  # decode
+            from jax.sharding import PartitionSpec as P
+            s = jax.lax.with_sharding_constraint(s, P(*cfg.score_spec))
+        pr = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", pr.astype(v.dtype), v,
+                          preferred_element_type=jnp.float32).astype(v.dtype)
+
+    if Sq <= _CHUNK_THRESHOLD or Sq % q_chunk:
+        o = blk(q_nope, q_rope, posq)
+    else:
+        nq = Sq // q_chunk
+        qn = q_nope.reshape(B, nq, q_chunk, H, nope).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, nq, q_chunk, H, rope).transpose(1, 0, 2, 3, 4)
+        pr_ = posq.reshape(nq, q_chunk)
+
+        def scan_fn(_, inp):
+            a, b, c = inp
+            return None, blk(a, b, c)
+
+        _, ob = jax.lax.scan(scan_fn, None, (qn, qr, pr_))
+        o = ob.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, vd)
+    return o.reshape(B, Sq, H * vd)
+
+
+def mla_attention(p: dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                  pos: jnp.ndarray | None = None, **_) -> jnp.ndarray:
+    B, S, _ = x.shape
+    if pos is None:
+        pos = jnp.arange(S)
+    qn, qr, c_kv, k_rope = _mla_parts(p, x, cfg)
+    o = _mla_attend(p, qn, qr, c_kv, k_rope, pos, pos, cfg)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def mla_decode(p: dict, x: jnp.ndarray, cache: dict, cur: jnp.ndarray,
+               cfg: ModelConfig, **_):
+    """cache: {c_kv: (B,Smax,lora), k_rope: (B,Smax,rope)} — compressed."""
+    qn, qr, c_kv_new, k_rope_new = _mla_parts(p, x, cfg)
+    ck = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, cur, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, cur, 0))
+    posq = jnp.full((1,), cur, jnp.int32)
+    posk = jnp.arange(ck.shape[1])
+    o = _mla_attend(p, qn, qr, ck, kr, posq, posk, cfg)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"c_kv": ck, "k_rope": kr}

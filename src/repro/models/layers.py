@@ -1,0 +1,71 @@
+"""Shared neural layers: RMSNorm, RoPE, SwiGLU MLP, embeddings, losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rmsnorm", "rope_freqs", "apply_rope", "swiglu", "embed",
+           "unembed", "softmax_cross_entropy", "causal_window_mask"]
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * rms) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope_freqs(hd: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))             # (hd/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs       # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU MLP. p: {gate: (D,F), up: (D,F), down: (F,D)}."""
+    g = jnp.einsum("...d,df->...f", x, p["gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["down"].astype(x.dtype))
+
+
+def embed(w: jnp.ndarray, tokens: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(w, tokens, axis=0).astype(dtype)
+
+
+def unembed(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Logits in float32 (numerics) — w: (D, V)."""
+    return jnp.einsum("...d,dv->...v", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: jnp.ndarray | None = None):
+    """Mean next-token CE. logits: (B,S,V) f32; labels: (B,S) int32."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def causal_window_mask(q_pos: jnp.ndarray, k_pos: jnp.ndarray,
+                       window: int | None) -> jnp.ndarray:
+    """(..., Sq, Sk) boolean mask: causal, optionally sliding-window."""
+    m = k_pos[..., None, :] <= q_pos[..., :, None]
+    if window is not None:
+        m = m & (k_pos[..., None, :] > q_pos[..., :, None] - window)
+    return m

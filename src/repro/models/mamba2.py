@@ -1,0 +1,155 @@
+"""Mamba2 (SSD — state-space duality) block, chunked train + O(1) decode.
+
+Faithful to arXiv:2405.21060: the sequence is processed in chunks; within
+a chunk the recurrence is computed as a masked (L×L) matmul (the "dual"
+quadratic form — MXU-friendly), and a lax.scan over chunk-final states
+carries the recurrence between chunks. Decode keeps a constant-size
+(H, P, N) state per layer — the reason long_500k is assigned to the
+SSM/hybrid archs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import rmsnorm
+
+__all__ = ["ssd_chunked", "ssd_decode_step", "mamba2_block", "mamba2_decode"]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD scan. x:(B,T,H,P) dt:(B,T,H) A:(H,)<0 Bm/Cm:(B,T,G,N) -> y:(B,T,H,P).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t x_t ⊗ B_t ;  y_t = C_t · h_t
+    """
+    Bsz, T, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = chunk
+    assert T % L == 0, (T, L)
+    nc = T // L
+    rep = H // G
+    x = x.astype(jnp.float32)
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+
+    xd = x * dt[..., None]
+    la = dt * A[None, None, :]                       # log decay per step
+    xc = xd.reshape(Bsz, nc, L, H, P)
+    Bc = Bh.reshape(Bsz, nc, L, H, N)
+    Cc = Ch.reshape(Bsz, nc, L, H, N)
+    lac = la.reshape(Bsz, nc, L, H)
+    cums = jnp.cumsum(lac, axis=2)                   # inclusive cumulative
+
+    # intra-chunk dual form: M[t,s] = exp(cums_t - cums_s)·(C_t·B_s), s<=t
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,nc,Lt,Ls,H)
+    tri = np.tril(np.ones((L, L), dtype=bool))
+    scores = jnp.einsum("bclhn,bcshn->bclsh", Cc, Bc)
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0) * scores
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", M, xc)
+
+    # chunk-final local states + inter-chunk scan
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)        # (B,nc,L,H)
+    S = jnp.einsum("bclh,bclhn,bclhp->bchpn", decay_to_end, Bc, xc)
+    chunk_decay = jnp.exp(cums[:, :, -1, :])                 # (B,nc,H)
+
+    def scan_fn(h, inp):
+        cd, s = inp
+        return h * cd[..., None, None] + s, h
+
+    _, h_enter = jax.lax.scan(
+        scan_fn, jnp.zeros((Bsz, H, P, N), jnp.float32),
+        (chunk_decay.transpose(1, 0, 2), S.transpose(1, 0, 2, 3, 4)))
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp",
+                         jnp.exp(cums), Cc, h_enter)
+    return (y_intra + y_inter).reshape(Bsz, T, H, P)
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """One token. h:(B,H,P,N) x:(B,H,P) dt:(B,H) Bm/Cm:(B,G,N) -> (y, h')."""
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(dt.astype(jnp.float32) * A[None, :])         # (B,H)
+    u = jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32) * dt[..., None], Bh)
+    h_new = h * a[..., None, None] + u
+    y = jnp.einsum("bhpn,bhn->bhp", h_new, Ch)
+    return y, h_new
+
+
+def _split_proj(p, xin, cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    gn = ssm.n_groups * ssm.d_state
+    H = d_inner // ssm.head_dim
+    zxbcdt = jnp.einsum("...d,dk->...k", xin, p["in_proj"].astype(xin.dtype))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn:]
+    return z, xbc, dt, d_inner, gn, H
+
+
+def _conv_train(xbc, w, b):
+    """Causal depthwise conv over time. xbc:(B,T,C) w:(W,C) b:(C,)."""
+    W = w.shape[0]
+    pads = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for t in range(W):
+        out = out + pads[:, t:t + xbc.shape[1]].astype(jnp.float32) * \
+            w[t][None, None].astype(jnp.float32)
+    return jax.nn.silu(out + b[None, None].astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba2_block(p: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence Mamba2 mixer (pre-norm residual applied by caller)."""
+    ssm = cfg.ssm
+    Bsz, T, D = x.shape
+    z, xbc, dtp, d_inner, gn, H = _split_proj(p, x, cfg)
+    xbc = _conv_train(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner]
+    Bm = xbc[..., d_inner:d_inner + gn].reshape(Bsz, T, ssm.n_groups, ssm.d_state)
+    Cm = xbc[..., d_inner + gn:].reshape(Bsz, T, ssm.n_groups, ssm.d_state)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) +
+                         p["dt_bias"][None, None].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(Bsz, T, H, ssm.head_dim)
+    y = ssd_chunked(xh, dt, A, Bm, Cm, ssm.chunk)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(Bsz, T, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["gnorm"], cfg.norm_eps)
+    return jnp.einsum("...k,kd->...d", y, p["out_proj"].astype(x.dtype))
+
+
+def mamba2_decode(p: dict, x: jnp.ndarray, cache: dict, cfg: ModelConfig):
+    """One-token decode. x:(B,1,D); cache {conv:(B,W-1,C), ssm:(B,H,P,N)}."""
+    ssm = cfg.ssm
+    Bsz = x.shape[0]
+    z, xbc, dtp, d_inner, gn, H = _split_proj(p, x[:, 0], cfg)
+    # conv with rolling state
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None]], axis=1)  # (B,W,C)
+    w, b = p["conv_w"], p["conv_b"]
+    xbc_c = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b[None].astype(jnp.float32)
+    ).astype(x.dtype)
+    new_conv = conv_in[:, 1:]
+    xs = xbc_c[..., :d_inner]
+    Bm = xbc_c[..., d_inner:d_inner + gn].reshape(Bsz, ssm.n_groups, ssm.d_state)
+    Cm = xbc_c[..., d_inner + gn:].reshape(Bsz, ssm.n_groups, ssm.d_state)
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"][None])
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(Bsz, H, ssm.head_dim)
+    y, h_new = ssd_decode_step(cache["ssm"].astype(jnp.float32), xh, dt, A, Bm, Cm)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(Bsz, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"conv": new_conv, "ssm": h_new.astype(cache["ssm"].dtype)}

@@ -1,0 +1,696 @@
+"""Model assembly: param-def trees + scan-over-layers forward/decode.
+
+All families share the machinery: per-layer parameters are stacked on a
+leading ``layers`` axis and the layer body runs under ``lax.scan`` (keeps
+HLO size O(1) in depth — essential for the 40-cell dry-run) wrapped in
+``jax.checkpoint`` for training remat.
+
+Families:
+  dense   — GQA decoder LM (smollm, deepseek-coder, phi4, gemma3 w/ 5:1
+            local:global pattern via per-layer scan flags)
+  moe     — dense attention or MLA + fine-grained MoE FFN (deepseek-moe,
+            deepseek-v2-lite); first_k_dense layers use a dense FFN
+  ssm     — Mamba2/SSD stack (mamba2-2.7b)
+  hybrid  — Mamba2 stack + ONE weight-shared GQA block applied every
+            `period` layers (zamba2)
+  encdec  — whisper: bidirectional encoder over stubbed frame embeddings,
+            causal decoder w/ cross attention (RoPE in decoder — learned
+            448-pos table replaced to support the 32k stress shapes; see
+            DESIGN.md)
+  vlm     — internvl: stubbed ViT patch embeddings -> projector -> LM
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from .config import ModelConfig
+from .layers import (causal_window_mask, embed, rmsnorm, rope_freqs, swiglu,
+                     softmax_cross_entropy, unembed)
+from .mamba2 import mamba2_block, mamba2_decode
+from .moe import moe_ffn
+from .params import ParamDef
+
+__all__ = ["model_defs", "forward", "forward_hidden", "prefill",
+           "decode_step", "cache_defs", "loss_fn"]
+
+L = "layers"
+
+
+# ======================================================================
+# Param defs
+# ======================================================================
+
+def _attn_defs(cfg: ModelConfig, n_layers: int | None, *, heads=None,
+               kv=None) -> dict:
+    """GQA projection defs; n_layers=None -> unstacked (shared block)."""
+    H = heads or cfg.n_heads
+    KV = kv or cfg.n_kv_heads
+    hd = cfg.hd
+    D = cfg.d_model
+    lead = () if n_layers is None else (n_layers,)
+    la = () if n_layers is None else (L,)
+    o_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    return {
+        "wq": ParamDef(lead + (D, H * hd), la + ("embed", "heads")),
+        "wk": ParamDef(lead + (D, KV * hd), la + ("embed", "kv_heads")),
+        "wv": ParamDef(lead + (D, KV * hd), la + ("embed", "kv_heads")),
+        "wo": ParamDef(lead + (H * hd, D), la + ("heads", "embed"), scale=o_scale),
+    }
+
+
+def _mla_defs(cfg: ModelConfig, n_layers: int) -> dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    o_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    return {
+        "wq": ParamDef((n_layers, D, H * (m.qk_nope_dim + m.qk_rope_dim)),
+                       (L, "embed", "heads")),
+        "w_dkv": ParamDef((n_layers, D, m.kv_lora_rank + m.qk_rope_dim),
+                          (L, "embed", None)),
+        "w_uk": ParamDef((n_layers, m.kv_lora_rank, H * m.qk_nope_dim),
+                         (L, None, "heads")),
+        "w_uv": ParamDef((n_layers, m.kv_lora_rank, H * m.v_dim),
+                         (L, None, "heads")),
+        "wo": ParamDef((n_layers, H * m.v_dim, D), (L, "heads", "embed"),
+                       scale=o_scale),
+    }
+
+
+def _mlp_defs(D: int, F: int, n_layers: int | None, o_scale: float) -> dict:
+    lead = () if n_layers is None else (n_layers,)
+    la = () if n_layers is None else (L,)
+    return {
+        "gate": ParamDef(lead + (D, F), la + ("embed", "ffn")),
+        "up": ParamDef(lead + (D, F), la + ("embed", "ffn")),
+        "down": ParamDef(lead + (F, D), la + ("ffn", "embed"), scale=o_scale),
+    }
+
+
+def _norm(D: int, n_layers: int | None, name_unused=None) -> ParamDef:
+    lead = () if n_layers is None else (n_layers,)
+    la = () if n_layers is None else (L,)
+    return ParamDef(lead + (D,), la + (None,), init="zeros")
+
+
+def _moe_defs(cfg: ModelConfig, n_layers: int) -> dict:
+    mo = cfg.moe
+    D, E, Fe = cfg.d_model, mo.n_routed, mo.d_ff_expert
+    Fs = mo.n_shared * Fe
+    o_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    return {
+        "router": ParamDef((n_layers, D, E), (L, "embed", None)),
+        # experts: EP only (expert axis on "model"). FSDP-sharding the
+        # embed dim too would make every expert GEMM a partial-sum
+        # all-reduce over "data" of the full activation (§Perf log).
+        "w1": ParamDef((n_layers, E, D, Fe), (L, "expert", None, None)),
+        "w3": ParamDef((n_layers, E, D, Fe), (L, "expert", None, None)),
+        "w2": ParamDef((n_layers, E, Fe, D), (L, "expert", None, None),
+                       scale=o_scale),
+        "shared_gate": ParamDef((n_layers, D, Fs), (L, "embed", "ffn")),
+        "shared_up": ParamDef((n_layers, D, Fs), (L, "embed", "ffn")),
+        "shared_down": ParamDef((n_layers, Fs, D), (L, "ffn", "embed"),
+                                scale=o_scale),
+    }
+
+
+def _mamba_defs(cfg: ModelConfig, n_layers: int) -> dict:
+    ssm = cfg.ssm
+    D = cfg.d_model
+    d_inner = ssm.expand * D
+    gn = ssm.n_groups * ssm.d_state
+    H = d_inner // ssm.head_dim
+    d_in_proj = 2 * d_inner + 2 * gn + H
+    conv_dim = d_inner + 2 * gn
+    o_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    return {
+        "norm": _norm(D, n_layers),
+        "in_proj": ParamDef((n_layers, D, d_in_proj), (L, "embed", "inner")),
+        "conv_w": ParamDef((n_layers, ssm.conv_width, conv_dim),
+                           (L, None, "conv")),
+        "conv_b": ParamDef((n_layers, conv_dim), (L, "conv"), init="zeros"),
+        "a_log": ParamDef((n_layers, H), (L, None), init="custom:a_log"),
+        "d_skip": ParamDef((n_layers, H), (L, None), init="ones"),
+        "dt_bias": ParamDef((n_layers, H), (L, None), init="custom:dt_bias"),
+        "gnorm": ParamDef((n_layers, d_inner), (L, "inner"), init="zeros"),
+        "out_proj": ParamDef((n_layers, d_inner, D), (L, "inner", "embed"),
+                             scale=o_scale),
+    }
+
+
+def _decoder_layer_defs(cfg: ModelConfig, n_layers: int, *, use_moe: bool,
+                        cross: bool = False) -> dict:
+    D = cfg.d_model
+    o_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+    d = {"norm1": _norm(D, n_layers), "norm2": _norm(D, n_layers)}
+    if cfg.mla is not None:
+        d.update(_mla_defs(cfg, n_layers))
+    else:
+        d.update(_attn_defs(cfg, n_layers))
+    if cross:
+        d["norm_x"] = _norm(D, n_layers)
+        d["cross"] = _attn_defs(cfg, n_layers, kv=cfg.n_heads)  # cross is MHA
+    if use_moe:
+        d["moe"] = _moe_defs(cfg, n_layers)
+    else:
+        d.update(_mlp_defs(D, cfg.d_ff, n_layers, o_scale))
+    return d
+
+
+def model_defs(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.vocab_padded
+    defs: dict[str, Any] = {
+        "embed": ParamDef((V, D), ("vocab", "embed")),
+        "final_norm": _norm(D, None),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((D, V), ("embed", "vocab"))
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        defs["layers"] = _decoder_layer_defs(cfg, cfg.n_layers, use_moe=False)
+        if fam == "vlm":
+            defs["projector"] = {
+                "w1": ParamDef((cfg.vlm.vit_dim, D), (None, "embed")),
+                "norm": ParamDef((cfg.vlm.vit_dim,), (None,), init="zeros"),
+            }
+    elif fam == "moe":
+        k = cfg.moe.first_k_dense
+        dense_cfg_ff = cfg.moe.d_ff_expert * (cfg.moe.top_k + cfg.moe.n_shared)
+        if k:
+            d = _decoder_layer_defs(cfg, k, use_moe=False)
+            # first-k dense layers use the "active-equivalent" FFN width
+            o_scale = 0.02 / np.sqrt(2 * cfg.n_layers)
+            d.update(_mlp_defs(D, dense_cfg_ff, k, o_scale))
+            defs["dense_layers"] = d
+        defs["layers"] = _decoder_layer_defs(cfg, cfg.n_layers - k, use_moe=True)
+    elif fam == "ssm":
+        defs["layers"] = _mamba_defs(cfg, cfg.n_layers)
+    elif fam == "hybrid":
+        defs["layers"] = _mamba_defs(cfg, cfg.n_layers)
+        hy = cfg.hybrid
+        shared = {"norm1": _norm(D, None), "norm2": _norm(D, None)}
+        shared.update(_attn_defs(cfg, None, heads=hy.shared_n_heads,
+                                 kv=hy.shared_n_kv_heads))
+        shared.update(_mlp_defs(D, hy.shared_d_ff, None,
+                                0.02 / np.sqrt(2 * cfg.n_layers)))
+        defs["shared_block"] = shared
+    elif fam == "encdec":
+        defs["layers"] = _decoder_layer_defs(cfg, cfg.n_layers, use_moe=False,
+                                             cross=True)
+        defs["enc_layers"] = _decoder_layer_defs(cfg, cfg.encdec.n_enc_layers,
+                                                 use_moe=False)
+        defs["enc_final_norm"] = _norm(D, None)
+    else:
+        raise ValueError(fam)
+    return defs
+
+
+# ======================================================================
+# Forward (full sequence)
+# ======================================================================
+
+def _layer_flags(cfg: ModelConfig) -> np.ndarray:
+    return np.array([cfg.layer_is_global(i) for i in range(cfg.n_layers)],
+                    dtype=np.bool_)
+
+
+def _act_constraint(x, cfg: ModelConfig):
+    """Optional residual-stream sharding (set by the launcher per mesh).
+
+    cfg.act_spec is a PartitionSpec-able tuple for (B, S, D) — typically
+    (batch_axes, "model", None): sequence-sharded residuals (Megatron-SP
+    style) so scan-saved remat residuals are 1/TP the size.
+    """
+    if cfg.act_spec is None or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(*cfg.act_spec))
+
+
+def _attn_layer_train(p, x, cfg: ModelConfig, is_global, pos, *, cross_kv=None):
+    """One decoder layer (attention + FFN/MoE). Returns (x, aux)."""
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a = attn.mla_attention(p, h, cfg, pos=pos)
+    else:
+        a = attn.gqa_attention(p, h, cfg, is_global=is_global, pos=pos)
+    x = x + a
+    if cross_kv is not None:
+        hx = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        x = x + _cross_attention(p["cross"], hx, cross_kv, cfg)
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        f, aux = moe_ffn(p["moe"], h2, cfg)
+    else:
+        f = swiglu(p, h2)
+    return _act_constraint(x + f, cfg), aux
+
+
+def _cross_attention(p, h, enc_kv, cfg: ModelConfig):
+    """Decoder cross-attention over precomputed encoder K/V."""
+    B, S, D = h.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", h, p["wq"].astype(h.dtype)).reshape(B, S, H, hd)
+    k, v = enc_kv
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(hd)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", pr.astype(v.dtype), v)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd),
+                      p["wo"].astype(h.dtype))
+
+
+def _scan_layers(layer_fn, stacked, x, xs_extra=None, remat=True):
+    body = layer_fn
+    if remat == "dots":
+        # save weight-GEMM outputs (no recompute of FSDP-gathered matmuls
+        # in bwd), recompute the cheap elementwise chain
+        body = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    elif remat:
+        body = jax.checkpoint(layer_fn)
+
+    def scan_body(carry, inp):
+        x, aux = carry
+        pl, extra = inp
+        x, a = body(pl, x, extra)
+        return (x, aux + a), None
+
+    xs = (stacked, xs_extra)
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux
+
+
+def _mamba_layer(p, x, cfg):
+    h = rmsnorm(x, p["norm"], cfg.norm_eps)
+    return _act_constraint(x + mamba2_block(p, h, cfg), cfg)
+
+
+def _encode(params, frames, cfg: ModelConfig, remat=True):
+    """whisper encoder: bidirectional attention over frame embeddings."""
+    x = frames.astype(jnp.dtype(cfg.activation_dtype))
+    S = x.shape[1]
+    pos = jnp.arange(S)
+
+    def layer(p, x, _):
+        h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+        a = attn.gqa_attention(p, h, cfg, pos=pos, causal=False)
+        x = x + a
+        h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+        return x + swiglu(p, h2), jnp.zeros((), jnp.float32)
+
+    nl = cfg.encdec.n_enc_layers
+    x, _ = _scan_layers(layer, params["enc_layers"], x,
+                        jnp.zeros((nl,), bool), remat)
+    return rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params: dict, batch: dict, cfg: ModelConfig,
+                   remat: bool = True):
+    """Full-sequence trunk -> (hidden (B,S,D) after final norm, aux_loss)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, adt)
+    if cfg.family == "vlm":
+        pn = params["projector"]
+        patches = rmsnorm(batch["patches"].astype(adt), pn["norm"], cfg.norm_eps)
+        pe = jnp.einsum("bpv,vd->bpd", patches, pn["w1"].astype(adt))
+        x = jnp.concatenate([pe, x], axis=1)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        def layer(p, x, _):
+            return _mamba_layer(p, x, cfg), jnp.zeros((), jnp.float32)
+        x, _ = _scan_layers(layer, params["layers"], x,
+                            jnp.zeros((cfg.n_layers,), bool), remat)
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, x, cfg, remat)
+    elif cfg.family == "encdec":
+        enc = _encode(params, batch["frames"], cfg, remat)
+        ek, ev = _enc_kv_all(params, enc, cfg)
+
+        def layer(p, x, ekv):
+            return _attn_layer_train(p, x, cfg, jnp.asarray(True), pos,
+                                     cross_kv=ekv)
+        x, _ = _scan_layers(layer, params["layers"], x, (ek, ev), remat)
+    else:
+        flags = jnp.asarray(_layer_flags(cfg))
+        if cfg.family == "moe" and cfg.moe.first_k_dense:
+            k = cfg.moe.first_k_dense
+
+            def dlayer(p, x, fl):
+                return _attn_layer_train(p, x, cfg, fl, pos)
+            x, a1 = _scan_layers(dlayer, params["dense_layers"], x, flags[:k],
+                                 remat)
+            aux = aux + a1
+            flags = flags[k:]
+
+        def layer(p, x, fl):
+            return _attn_layer_train(p, x, cfg, fl, pos)
+        x, a2 = _scan_layers(layer, params["layers"], x, flags, remat)
+        aux = aux + a2
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _unembed_w(params, cfg):
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def _mask_pad(logits, cfg: ModelConfig):
+    """-inf the padded vocab tail (vocab_pad_multiple) wherever logits
+    surface, so padding never wins a softmax/argmax."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    keep = jnp.arange(logits.shape[-1]) < cfg.vocab
+    return jnp.where(keep, logits, -1e30)
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, remat: bool = True):
+    """Full-sequence forward -> (logits f32 (B,S,V), aux_loss).
+
+    Materialises the full logits — use only for small configs/tests;
+    loss_fn and prefill use the chunked/last-position paths.
+    """
+    x, aux = forward_hidden(params, batch, cfg, remat)
+    return _mask_pad(unembed(_unembed_w(params, cfg), x), cfg), aux
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig, remat: bool = False):
+    """Inference prefill: trunk + LAST-position logits only (B,V)."""
+    x, _ = forward_hidden(params, batch, cfg, remat)
+    return _mask_pad(unembed(_unembed_w(params, cfg), x[:, -1]), cfg)
+
+
+def _chunked_ce(hidden, w_un, labels, mask, cfg, chunk: int = 512):
+    """CE without materialising (B,S,V): scan over sequence chunks."""
+    B, S, D = hidden.shape
+    if S % chunk:
+        logits = _mask_pad(unembed(w_un, hidden), cfg)
+        return softmax_cross_entropy(logits, labels, mask)
+    ns = S // chunk
+    h = hidden.reshape(B, ns, chunk, D).transpose(1, 0, 2, 3)
+    lb = labels.reshape(B, ns, chunk).transpose(1, 0, 2)
+    mk = (jnp.ones_like(labels, jnp.float32) if mask is None
+          else mask.astype(jnp.float32))
+    mk = mk.reshape(B, ns, chunk).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hc, lc, mc = inp
+        logits = _mask_pad(unembed(w_un, hc), cfg)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - ll) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (h, lb, mk))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _enc_kv_all(params, enc, cfg):
+    """Precompute cross K/V for every decoder layer: (L,B,F,H,hd) each."""
+    H, hd = cfg.n_heads, cfg.hd
+    B, F, D = enc.shape
+
+    def per_layer(pl):
+        k = jnp.einsum("bfd,dh->bfh", enc, pl["wk"].astype(enc.dtype))
+        v = jnp.einsum("bfd,dh->bfh", enc, pl["wv"].astype(enc.dtype))
+        return k.reshape(B, F, H, hd), v.reshape(B, F, H, hd)
+
+    return jax.vmap(per_layer)(params["layers"]["cross"])
+
+
+def _hybrid_forward(params, x, cfg: ModelConfig, remat=True):
+    """zamba2: scan mamba segments; shared GQA block between segments."""
+    hy = cfg.hybrid
+    period = hy.period
+    nl = cfg.n_layers
+    pos = jnp.arange(x.shape[1])
+    shared = params["shared_block"]
+
+    def mamba_layer(p, x, _):
+        return _mamba_layer(p, x, cfg), jnp.zeros((), jnp.float32)
+
+    def shared_apply(x):
+        h = rmsnorm(x, shared["norm1"], cfg.norm_eps)
+        scfg = _shared_cfg(cfg)
+        a = attn.gqa_attention(shared, h, scfg, pos=pos)
+        x = x + a
+        h2 = rmsnorm(x, shared["norm2"], cfg.norm_eps)
+        return x + swiglu(shared, h2)
+
+    start = 0
+    while start < nl:
+        stop = min(start + period, nl)
+        seg = jax.tree.map(lambda a: a[start:stop], params["layers"])
+        x, _ = _scan_layers(mamba_layer, seg, x,
+                            jnp.zeros((stop - start,), bool), remat)
+        if stop < nl or stop % period == 0:
+            x = shared_apply(x)
+        start = stop
+    return x
+
+
+def _shared_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    hy = cfg.hybrid
+    return dataclasses.replace(cfg, n_heads=hy.shared_n_heads,
+                               n_kv_heads=hy.shared_n_kv_heads,
+                               head_dim=cfg.d_model // hy.shared_n_heads,
+                               mla=None, sliding_window=None)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: bool = True):
+    hidden, aux = forward_hidden(params, batch, cfg, remat)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        # hidden covers [patches; text] — score text positions only
+        hidden = hidden[:, cfg.vlm.n_patches:]
+    mask = batch.get("loss_mask")
+    ce = _chunked_ce(hidden, _unembed_w(params, cfg), labels, mask, cfg)
+    return ce + aux, (ce, aux)
+
+
+# ======================================================================
+# Decode (single token with cache)
+# ======================================================================
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ParamDef tree for the decode cache (reuses the sharding machinery)."""
+    adt = "cache"  # marker; dtype chosen at init
+    nl = cfg.n_layers
+    B = batch
+    hd = cfg.hd
+
+    def kv(n_layers, kvh, seq):
+        return {
+            "k": ParamDef((n_layers, B, seq, kvh, hd),
+                          (L, "batch", "seq", "kv_heads", None), init="zeros"),
+            "v": ParamDef((n_layers, B, seq, kvh, hd),
+                          (L, "batch", "seq", "kv_heads", None), init="zeros"),
+        }
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        return {"layers": kv(nl, cfg.n_kv_heads, max_len)}
+    if fam == "moe":
+        k = cfg.moe.first_k_dense
+        m = cfg.mla
+        if m is not None:
+            def mla_cache(n):
+                return {
+                    "c_kv": ParamDef((n, B, max_len, m.kv_lora_rank),
+                                     (L, "batch", "seq", None), init="zeros"),
+                    "k_rope": ParamDef((n, B, max_len, m.qk_rope_dim),
+                                       (L, "batch", "seq", None), init="zeros"),
+                }
+            d = {"layers": mla_cache(nl - k)}
+            if k:
+                d["dense_layers"] = mla_cache(k)
+            return d
+        d = {"layers": kv(nl - k, cfg.n_kv_heads, max_len)}
+        if k:
+            d["dense_layers"] = kv(k, cfg.n_kv_heads, max_len)
+        return d
+    if fam in ("ssm", "hybrid"):
+        ssm = cfg.ssm
+        d_inner = ssm.expand * cfg.d_model
+        gn = ssm.n_groups * ssm.d_state
+        H = d_inner // ssm.head_dim
+        conv_dim = d_inner + 2 * gn
+        d = {"layers": {
+            "conv": ParamDef((nl, B, ssm.conv_width - 1, conv_dim),
+                             (L, "batch", None, "conv"), init="zeros"),
+            "ssm": ParamDef((nl, B, H, ssm.head_dim, ssm.d_state),
+                            (L, "batch", "inner", None, None), init="zeros"),
+        }}
+        if fam == "hybrid":
+            n_app = _n_shared_apps(cfg)
+            hy = cfg.hybrid
+            d["shared"] = {
+                "k": ParamDef((n_app, B, max_len, hy.shared_n_kv_heads,
+                               cfg.d_model // hy.shared_n_heads),
+                              (None, "batch", "seq", "kv_heads", None),
+                              init="zeros"),
+                "v": ParamDef((n_app, B, max_len, hy.shared_n_kv_heads,
+                               cfg.d_model // hy.shared_n_heads),
+                              (None, "batch", "seq", "kv_heads", None),
+                              init="zeros"),
+            }
+        return d
+    if fam == "encdec":
+        F = cfg.encdec.n_frames
+        d = {"layers": kv(nl, cfg.n_kv_heads, max_len)}
+        d["cross"] = {
+            "k": ParamDef((nl, B, F, cfg.n_heads, hd),
+                          (L, "batch", None, "heads", None), init="zeros"),
+            "v": ParamDef((nl, B, F, cfg.n_heads, hd),
+                          (L, "batch", None, "heads", None), init="zeros"),
+        }
+        return d
+    raise ValueError(fam)
+
+
+def _n_shared_apps(cfg: ModelConfig) -> int:
+    hy = cfg.hybrid
+    n = 0
+    start = 0
+    while start < cfg.n_layers:
+        stop = min(start + hy.period, cfg.n_layers)
+        if stop < cfg.n_layers or stop % hy.period == 0:
+            n += 1
+        start = stop
+    return n
+
+
+def _attn_layer_decode(p, x, cl, cur, cfg, is_global, cross_kv=None):
+    h = rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        a, cl_new = attn.mla_decode(p, h, cl, cur, cfg)
+    else:
+        a, cl_new = attn.gqa_decode(p, h, cl, cur, cfg, is_global=is_global)
+    x = x + a
+    if cross_kv is not None:
+        hx = rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        x = x + _cross_attention(p["cross"], hx, cross_kv, cfg)
+    h2 = rmsnorm(x, p["norm2"], cfg.norm_eps)
+    if "moe" in p:
+        f, _ = moe_ffn(p["moe"], h2, cfg)
+    else:
+        f = swiglu(p, h2)
+    return x + f, cl_new
+
+
+def _scan_decode(layer_fn, stacked, cache, x, xs_extra):
+    def body(x, inp):
+        pl, cl, extra = inp
+        x, cl_new = layer_fn(pl, x, cl, extra)
+        return x, cl_new
+
+    x, new_cache = jax.lax.scan(body, x, (stacked, cache, xs_extra))
+    return x, new_cache
+
+
+def decode_step(params: dict, cache: dict, batch: dict, cfg: ModelConfig):
+    """One-token decode. batch: {tokens:(B,1), cur:() int32} -> (logits, cache)."""
+    adt = jnp.dtype(cfg.activation_dtype)
+    tokens, cur = batch["tokens"], batch["cur"]
+    x = embed(params["embed"], tokens, adt)
+    fam = cfg.family
+    new_cache = dict(cache)
+
+    if fam in ("dense", "vlm", "moe"):
+        flags = jnp.asarray(_layer_flags(cfg))
+        if fam == "moe" and cfg.moe.first_k_dense:
+            k = cfg.moe.first_k_dense
+
+            def dl(p, x, cl, fl):
+                return _attn_layer_decode(p, x, cl, cur, cfg, fl)
+            x, nc = _scan_decode(dl, params["dense_layers"],
+                                 cache["dense_layers"], x, flags[:k])
+            new_cache["dense_layers"] = nc
+            flags = flags[k:]
+        else:
+            flags = flags[:]
+
+        def lyr(p, x, cl, fl):
+            return _attn_layer_decode(p, x, cl, cur, cfg, fl)
+        x, nc = _scan_decode(lyr, params["layers"], cache["layers"], x, flags)
+        new_cache["layers"] = nc
+    elif fam == "ssm":
+        def lyr(p, x, cl, _):
+            h = rmsnorm(x, p["norm"], cfg.norm_eps)
+            o, cl_new = mamba2_decode(p, h, cl, cfg)
+            return x + o, cl_new
+        x, nc = _scan_decode(lyr, params["layers"], cache["layers"], x,
+                             jnp.zeros((cfg.n_layers,), bool))
+        new_cache["layers"] = nc
+    elif fam == "hybrid":
+        x, nc, nshared = _hybrid_decode(params, cache, x, cur, cfg)
+        new_cache["layers"] = nc
+        new_cache["shared"] = nshared
+    elif fam == "encdec":
+        def lyr(p, x, cl, ekv):
+            return _attn_layer_decode(p, x, cl, cur, cfg, jnp.asarray(True),
+                                      cross_kv=ekv)
+        x, nc = _scan_decode(lyr, params["layers"], cache["layers"], x,
+                             (cache["cross"]["k"], cache["cross"]["v"]))
+        new_cache["layers"] = nc
+    else:
+        raise ValueError(fam)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    w_un = _unembed_w(params, cfg)
+    return _mask_pad(unembed(w_un, x), cfg), new_cache
+
+
+def _hybrid_decode(params, cache, x, cur, cfg):
+    hy = cfg.hybrid
+    nl = cfg.n_layers
+    shared = params["shared_block"]
+    scfg = _shared_cfg(cfg)
+
+    def mlyr(p, x, cl, _):
+        h = rmsnorm(x, p["norm"], cfg.norm_eps)
+        o, cl_new = mamba2_decode(p, h, cl, cfg)
+        return x + o, cl_new
+
+    new_layer_cache = []
+    new_shared = {"k": [], "v": []}
+    app = 0
+    start = 0
+    while start < nl:
+        stop = min(start + hy.period, nl)
+        seg_p = jax.tree.map(lambda a: a[start:stop], params["layers"])
+        seg_c = jax.tree.map(lambda a: a[start:stop], cache["layers"])
+        x, nc = _scan_decode(mlyr, seg_p, seg_c, x,
+                             jnp.zeros((stop - start,), bool))
+        new_layer_cache.append(nc)
+        if stop < nl or stop % hy.period == 0:
+            h = rmsnorm(x, shared["norm1"], cfg.norm_eps)
+            cl = {"k": cache["shared"]["k"][app], "v": cache["shared"]["v"][app]}
+            a, cl_new = attn.gqa_decode(shared, h, cl, cur, scfg)
+            x = x + a
+            h2 = rmsnorm(x, shared["norm2"], cfg.norm_eps)
+            x = x + swiglu(shared, h2)
+            new_shared["k"].append(cl_new["k"])
+            new_shared["v"].append(cl_new["v"])
+            app += 1
+        start = stop
+    nc_all = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_layer_cache)
+    shared_all = {k: jnp.stack(v, 0) for k, v in new_shared.items()}
+    return x, nc_all, shared_all

@@ -1,0 +1,85 @@
+"""Model zoo: config -> (defs, init, specs, loss, decode) bundle."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from .config import ModelConfig
+from .params import (abstract_params, count_params, init_params,
+                     partition_specs)
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ---- parameters
+    def defs(self):
+        return tfm.model_defs(self.cfg)
+
+    def init(self, key, dtype=jnp.float32):
+        return init_params(self.defs(), key, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return abstract_params(self.defs(), dtype)
+
+    def specs(self, extra_rules=None):
+        return partition_specs(self.defs(), extra_rules=extra_rules)
+
+    def n_params(self) -> int:
+        return count_params(self.defs())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE discount) for 6ND model flops."""
+        cfg = self.cfg
+        total = self.n_params()
+        if cfg.family != "moe":
+            return total
+        mo = cfg.moe
+        from .params import _leaf_paths
+        inactive = 0
+        for path, d in _leaf_paths(self.defs()):
+            if len(path) >= 2 and path[-2] == "moe" and path[-1] in ("w1", "w2", "w3"):
+                import numpy as np
+                full = int(np.prod(d.shape))
+                inactive += full * (mo.n_routed - mo.top_k) // mo.n_routed
+        return total - inactive
+
+    # ---- training
+    def loss(self, params, batch, remat: bool = True):
+        return tfm.loss_fn(params, batch, self.cfg, remat)
+
+    def forward(self, params, batch, remat: bool = False):
+        return tfm.forward(params, batch, self.cfg, remat)
+
+    def prefill(self, params, batch, remat: bool = False):
+        """Last-position logits (B,V) — the inference prefill step."""
+        return tfm.prefill(params, batch, self.cfg, remat)
+
+    # ---- serving
+    def cache_defs(self, batch: int, max_len: int):
+        return tfm.cache_defs(self.cfg, batch, max_len)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return init_params(self.cache_defs(batch, max_len),
+                           jax.random.PRNGKey(0), dtype)
+
+    def abstract_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        return abstract_params(self.cache_defs(batch, max_len), dtype)
+
+    def cache_specs(self, batch: int, max_len: int, extra_rules=None):
+        return partition_specs(self.cache_defs(batch, max_len),
+                               extra_rules=extra_rules)
+
+    def decode(self, params, cache, batch):
+        return tfm.decode_step(params, cache, batch, self.cfg)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,4 @@
+"""Roofline analysis from compiled artefacts."""
+
+from .analysis import HW, RooflineCell, analyze, collective_bytes  # noqa: F401
+from .hlo_cost import HloCost, analyze_hlo  # noqa: F401

@@ -1,0 +1,189 @@
+"""Roofline terms from compiled artefacts (no hardware required).
+
+Per (arch × shape × mesh) cell:
+
+    compute term    = HLO_FLOPs / peak_FLOPs            [s]
+    memory term     = HLO_bytes_accessed / HBM_bw       [s]
+    collective term = collective_bytes / ICI_link_bw    [s]
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the SPMD
+partitioner has already divided by device count — the compiled module IS
+the per-device program). Collective bytes are not in cost_analysis; we
+parse the optimized HLO text and sum result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware model (TPU v5e, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s per ICI link. The collective term charges bytes against ONE link
+(a 1D-ring collective keeps one send link busy; bidirectional/multi-axis
+overlap would halve it — we take the conservative bound and note it).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HW", "collective_bytes", "RooflineCell", "analyze"]
+
+HW = {
+    "flops_bf16": 197e12,
+    "flops_f32": 98.5e12,   # v5e f32 ~ half bf16 MXU rate (model)
+    "hbm_bw": 819e9,
+    "ici_link_bw": 50e9,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# e.g. "bf16[8,4096,960]{2,1,0}" — capture dtype and dims
+_SHAPE_RE = re.compile(r"(pred|[sbufc]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of collective ops in optimized HLO, by op kind.
+
+    Matches lines of the form ``%name = <shape> <op>(...)`` (also fused/
+    async started ops like all-gather-start).
+    """
+    out = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        for op in _COLL_OPS:
+            # op name directly before '(' — avoids matching metadata
+            m = re.search(rf"\)?\s({op}(?:-start|-done)?)\(", " " + rhs)
+            if m:
+                if m.group(1).endswith("-done"):
+                    break  # counted at -start
+                # result shape = text before the op name
+                head = rhs[:m.start(1)]
+                out[op] += _shape_bytes(head)
+                break
+    return out
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    coll_bytes: dict = field(default_factory=dict)
+    model_flops_global: float = 0.0   # 6·N·D (active params × tokens)
+    memory_per_device: dict = field(default_factory=dict)
+    xla_raw: dict = field(default_factory=dict)  # loop-blind reference
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / HW["flops_bf16"]
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HW["hbm_bw"]
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.coll_bytes.values()) / HW["ici_link_bw"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Roofline step time: max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × devices): remat/redundancy waste."""
+        total = self.flops * self.n_devices
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilisation at the roofline bound."""
+        peak = HW["flops_bf16"] * self.n_devices
+        return (self.model_flops_global / self.t_bound) / peak \
+            if self.t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_dev": self.flops,
+            "bytes_per_dev": self.bytes_accessed,
+            "coll_bytes": self.coll_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound_s": self.t_bound,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_frac": self.useful_flops_frac,
+            "mfu_bound": self.mfu_bound,
+            "memory_per_device": self.memory_per_device,
+            "xla_raw": self.xla_raw,
+        }
+
+
+def analyze(arch, shape, mesh_name, n_devices, compiled, model_flops_global,
+            hlo_text=None) -> RooflineCell:
+    """Roofline terms from the compiled per-device module.
+
+    flops/bytes/collectives come from the loop-aware HLO analyzer
+    (roofline/hlo_cost.py) because XLA's cost_analysis counts while
+    bodies once, and this framework scans over layers (EXPERIMENTS.md
+    §Dry-run notes the correction; XLA's raw numbers are recorded too).
+    """
+    from .hlo_cost import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": (getattr(mem, "temp_size_in_bytes", 0)
+                       + getattr(mem, "output_size_in_bytes", 0)),
+    }
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    hc = analyze_hlo(text)
+    cell = RooflineCell(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops=hc.flops,
+        bytes_accessed=hc.bytes,
+        coll_bytes={k: v for k, v in hc.coll_bytes.items() if v},
+        model_flops_global=model_flops_global,
+        memory_per_device=mem_d,
+    )
+    cell.xla_raw = {"flops": float(cost.get("flops", 0.0)),
+                    "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+                    "unknown_trip_loops": hc.unknown_trip_loops}
+    return cell

@@ -1,0 +1,419 @@
+"""Loop-aware cost model over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts each ``while`` body
+ONCE, ignoring trip count — and this framework deliberately puts every
+layer stack, attention q-chunk loop, CE chunk loop and SSD chunk loop
+under ``lax.scan`` (to keep HLO size O(1) in depth). XLA's numbers are
+therefore ~L× too small. This module re-derives
+
+    flops, bytes_accessed, collective bytes (by kind)
+
+from ``compiled.as_text()`` with loop expansion: a ``while`` contributes
+``trip × (body + cond)``; trip counts are read from the loop-condition
+computation's integer constant (lax.scan emits a static bound).
+
+Op cost model (dots dominate ≫99% of model flops):
+- dot:       2 · |out| · K   (K = product of lhs contracting dims)
+- reduce/elementwise/exp-family: |out| (1 flop per element)
+- fusion:    flops of the fused computation; bytes at the fusion
+             boundary only (operands + result), like XLA
+- call/conditional: flops/bytes of the callee (conditional: max branch)
+- collectives: result bytes, multiplied through enclosing loop trips
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(
+    r"(pred|bf16|f16|f32|f64|f8e4m3fn|f8e5m2|[su]\d+|c64|c128)\[([\d,]*)\]")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs", "sign",
+    "floor", "ceil", "cosine", "sine", "logistic", "expm1", "log1p",
+    "atan2", "remainder", "compare", "select", "and", "or", "xor", "not",
+    "clamp", "round-nearest-even", "round-nearest-afz", "cbrt", "erf",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES.get(dtype, 4)
+    return elems, nbytes
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    args: str
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    types: dict = field(default_factory=dict)  # symbol -> type str
+
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _split_rhs(rhs: str):
+    """rhs -> (type_str, opcode, args, attrs)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):  # tuple result type
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_str, rest = rhs[:i + 1], rhs[i + 1:].strip()
+    else:
+        # type is everything before " opcode(" — opcode is lowercase token
+        m = re.search(r"\s([a-z][\w\-]*)\(", rhs)
+        if not m:
+            return rhs, "", "", ""
+        type_str, rest = rhs[:m.start()], rhs[m.start():].strip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    if not m:
+        return type_str, "", "", ""
+    opcode = m.group(1)
+    depth = 0
+    for i in range(m.end() - 1, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            break
+    args = rest[m.end():i]
+    attrs = rest[i + 1:]
+    return type_str, opcode, args, attrs
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+                m = _HDR_RE.match(line.strip())
+                if m:
+                    cur = Computation(m.group(2))
+                    if m.group(1):
+                        comps["__entry__"] = cur
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        type_str, opcode, args, attrs = _split_rhs(rhs)
+        cur.types[name] = type_str
+        if opcode:
+            cur.ops.append(Op(name, type_str, opcode, args, attrs))
+    return comps
+
+
+def _callee(attrs: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _dot_flops(op: Op, comp: Computation, global_types: dict) -> float:
+    out_elems, _ = _shape_elems_bytes(op.type_str)
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.attrs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs_name = None
+    am = re.match(r"\s*%?([\w\.\-]+)", op.args)
+    if am:
+        lhs_name = am.group(1)
+    k = 1
+    lhs_type = comp.types.get(lhs_name) or global_types.get(lhs_name, "")
+    sm = _SHAPE_RE.search(lhs_type)
+    if sm:
+        dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
+        for c in cdims:
+            if c < len(dims):
+                k *= dims[c]
+    return 2.0 * out_elems * k
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: dict = field(default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    unknown_trip_loops: int = 0
+    bytes_by_op: dict = field(default_factory=dict)
+
+    def add_bytes(self, opcode: str, nbytes: float):
+        self.bytes += nbytes
+        self.bytes_by_op[opcode] = self.bytes_by_op.get(opcode, 0.0) + nbytes
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] += v * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    global_types: dict[str, str] = {}
+    for c in comps.values():
+        global_types.update(c.types)
+
+    fused = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                callee = _callee(op.attrs, "calls")
+                if callee:
+                    fused.add(callee)
+
+    # TPU-semantics byte attribution inside fused computations.
+    #
+    # 1. A parameter consumed only through *slicing* (dynamic-slice /
+    #    gather / slice — possibly via convert/bitcast/copy/reshape
+    #    pass-through chains, which XLA:CPU inserts to promote bf16 but a
+    #    TPU fuses for free) costs slice bytes, not the full buffer.
+    #    Crucial for scan-stacked weights and decode caches, where the
+    #    full (L, …) array would otherwise be charged per iteration (L×).
+    # 2. A parameter consumed as the *updated operand* of a
+    #    dynamic-update-slice is aliased in place: traffic = update size.
+    # 3. A fusion whose root is a dynamic-update-slice writes the update
+    #    region, not the whole result buffer.
+    sliced_param_bytes: dict[str, dict[int, int]] = {}
+    dus_root_out_bytes: dict[str, int] = {}
+    _SLICERS = ("dynamic-slice", "gather", "slice")
+    _PASSTHRU = ("convert", "bitcast", "copy", "reshape")
+    for cname in fused:
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        pnames = {}
+        uses: dict[str, list] = {}
+        for op in comp.ops:
+            if op.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", op.args)
+                if m:
+                    pnames[op.name] = int(m.group(1))
+            for a in re.findall(r"%([\w\.\-]+)", op.args):
+                uses.setdefault(a, []).append(op)
+
+        def sliced_bytes(name: str, depth: int = 0) -> int | None:
+            """Traffic if `name` is only sliced/aliased; None = whole."""
+            if depth > 12:
+                return None
+            total = 0
+            for op in uses.get(name, []):
+                first = re.match(r"\s*%?([\w\.\-]+)", op.args)
+                first = first.group(1) if first else ""
+                if op.opcode in _SLICERS and first == name:
+                    _, ob = _shape_elems_bytes(op.type_str)
+                    total += ob
+                elif op.opcode == "dynamic-update-slice" and first == name:
+                    args = re.findall(r"%([\w\.\-]+)", op.args)
+                    upd = args[1] if len(args) > 1 else None
+                    ub = _shape_elems_bytes(comp.types.get(upd, ""))[1] \
+                        if upd else 0
+                    total += ub
+                elif op.opcode in _PASSTHRU:
+                    sub = sliced_bytes(op.name, depth + 1)
+                    if sub is None:
+                        return None
+                    total += sub
+                else:
+                    return None
+            return total
+
+        per_param: dict[int, int] = {}
+        for pname, idx in pnames.items():
+            sb = sliced_bytes(pname)
+            if sb is not None:
+                per_param[idx] = sb
+        sliced_param_bytes[cname] = per_param
+
+        # root dynamic-update-slice (possibly behind pass-through ops)
+        if comp.ops:
+            root = comp.ops[-1]
+            seen = 0
+            while root.opcode in _PASSTHRU and seen < 4:
+                first = re.match(r"\s*%?([\w\.\-]+)", root.args)
+                nxt = next((o for o in comp.ops
+                            if first and o.name == first.group(1)), None)
+                if nxt is None:
+                    break
+                root = nxt
+                seen += 1
+            if root.opcode == "dynamic-update-slice":
+                args = re.findall(r"%([\w\.\-]+)", root.args)
+                upd = args[1] if len(args) > 1 else None
+                if upd:
+                    dus_root_out_bytes[cname] = _shape_elems_bytes(
+                        comp.types.get(upd, ""))[1]
+
+    cache: dict[tuple[str, bool], HloCost] = {}
+
+    def trip_count(cond_name: str) -> float | None:
+        cond = comps.get(cond_name)
+        if cond is None:
+            return None
+        best = None
+        for op in cond.ops:
+            if op.opcode == "constant":
+                m = re.match(r"\s*(\d+)\s*$", op.args)
+                if m:
+                    v = int(m.group(1))
+                    best = v if best is None else max(best, v)
+        return best
+
+    def cost_of(name: str, in_fusion: bool) -> HloCost:
+        key = (name, in_fusion)
+        if key in cache:
+            return cache[key]
+        comp = comps.get(name)
+        out = HloCost()
+        cache[key] = out
+        if comp is None:
+            return out
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body = _callee(op.attrs, "body")
+                cond = _callee(op.attrs, "condition")
+                trip = trip_count(cond) if cond else None
+                if trip is None:
+                    trip = 1
+                    out.unknown_trip_loops += 1
+                sub = HloCost()
+                if body:
+                    sub.add(cost_of(body, in_fusion))
+                if cond:
+                    sub.add(cost_of(cond, in_fusion))
+                out.add(sub, trip)
+            elif oc == "fusion":
+                callee = _callee(op.attrs, "calls")
+                if callee:
+                    inner = cost_of(callee, True)
+                    out.flops += inner.flops
+                    for k, v in inner.coll_bytes.items():
+                        out.coll_bytes[k] += v
+                    out.unknown_trip_loops += inner.unknown_trip_loops
+                if not in_fusion:
+                    if callee in dus_root_out_bytes:
+                        ob = dus_root_out_bytes[callee]  # in-place update
+                    else:
+                        _, ob = _shape_elems_bytes(op.type_str)
+                    sliced = sliced_param_bytes.get(callee, {})
+                    ib = 0
+                    for i, a in enumerate(re.findall(r"%([\w\.\-]+)", op.args)):
+                        if i in sliced:
+                            ib += sliced[i]  # slice traffic, not full buffer
+                        else:
+                            ib += _shape_elems_bytes(
+                                comp.types.get(a, global_types.get(a, "")))[1]
+                    out.add_bytes("fusion", ib + ob)
+            elif oc in ("call", "async-start", "async-done"):
+                callee = _callee(op.attrs, "to_apply") or _callee(op.attrs, "calls")
+                if callee:
+                    out.add(cost_of(callee, in_fusion))
+            elif oc == "conditional":
+                branches = re.findall(r"branch_computations={([^}]*)}", op.attrs)
+                names = re.findall(r"%([\w\.\-]+)",
+                                   branches[0]) if branches else []
+                names += [n for n in (_callee(op.attrs, "true_computation"),
+                                      _callee(op.attrs, "false_computation"))
+                          if n]
+                subs = [cost_of(n, in_fusion) for n in names]
+                if subs:
+                    best = max(subs, key=lambda s: s.flops + s.bytes)
+                    out.add(best)
+            elif oc == "dot":
+                out.flops += _dot_flops(op, comp, global_types)
+                if not in_fusion:
+                    _, ob = _shape_elems_bytes(op.type_str)
+                    ib = sum(_shape_elems_bytes(
+                        comp.types.get(a, global_types.get(a, "")))[1]
+                        for a in re.findall(r"%([\w\.\-]+)", op.args))
+                    out.add_bytes("dot", ib + ob)
+            elif oc == "convolution":
+                # out_elems × (2 × kernel spatial × in_features) — generic
+                out_elems, ob = _shape_elems_bytes(op.type_str)
+                out.flops += 2.0 * out_elems  # lower bound; none in our nets
+                if not in_fusion:
+                    out.add_bytes(oc, ob)
+            else:
+                base = oc.replace("-start", "")
+                if base in _COLLECTIVES:
+                    _, ob = _shape_elems_bytes(op.type_str)
+                    out.coll_bytes[base] += ob
+                if oc in _ELEMWISE or oc.startswith("reduce"):
+                    elems, _ = _shape_elems_bytes(
+                        op.type_str if not oc.startswith("reduce")
+                        else comp.types.get(
+                            re.findall(r"%([\w\.\-]+)", op.args)[0]
+                            if re.findall(r"%([\w\.\-]+)", op.args) else "",
+                            op.type_str))
+                    out.flops += elems
+                if not in_fusion and oc not in (
+                        "parameter", "constant", "tuple", "get-tuple-element",
+                        "bitcast", "reshape"):
+                    _, ob = _shape_elems_bytes(op.type_str)
+                    if oc in ("dynamic-slice", "slice", "gather", "broadcast",
+                              "iota"):
+                        # traffic = slice out (read) + out (write)
+                        out.add_bytes(oc, 2 * ob)
+                    elif oc in ("dynamic-update-slice", "scatter"):
+                        # traffic = update operand (read) + written region;
+                        # the full buffer is aliased, not rewritten
+                        args = re.findall(r"%([\w\.\-]+)", op.args)
+                        upd = args[1] if len(args) > 1 else None
+                        ub = _shape_elems_bytes(
+                            comp.types.get(upd, global_types.get(upd, "")))[1] \
+                            if upd else 0
+                        out.add_bytes(oc, 2 * ub)
+                    else:
+                        ib = sum(_shape_elems_bytes(
+                            comp.types.get(a, global_types.get(a, "")))[1]
+                            for a in re.findall(r"%([\w\.\-]+)", op.args))
+                        out.add_bytes(oc, ib + ob)
+        return out
+
+    if entry is None:
+        return HloCost()
+    total = HloCost()
+    total.add(cost_of(entry.name, False))
+    return total

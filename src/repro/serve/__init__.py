@@ -1,0 +1,3 @@
+"""Serving: jit'd decode step + batched driver."""
+
+from .serve_step import make_serve_step, greedy_decode  # noqa: F401

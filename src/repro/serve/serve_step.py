@@ -1,0 +1,57 @@
+"""Serving: jit'd single-token decode step + a batched decode driver.
+
+``make_serve_step`` is what the dry-run lowers for the decode_32k /
+long_500k shapes: one new token against a seq_len-deep cache. The driver
+implements greedy/temperature sampling over a batch of concurrent
+requests (static batch; a production server would add continuous
+batching on top — the step function is already shape-stable in that
+regime because the cache is preallocated at max_len).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import Model
+
+__all__ = ["make_serve_step", "greedy_decode"]
+
+
+def make_serve_step(model: Model, *, sample: bool = False,
+                    temperature: float = 1.0):
+    def serve_step(params, cache, batch):
+        """batch: {tokens:(B,1) int32, cur:() int32, rng: key (if sampling)}."""
+        logits, cache = model.decode(params, cache, batch)
+        lg = logits[:, -1]
+        if sample:
+            nxt = jax.random.categorical(batch["rng"], lg / temperature, -1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        return nxt.astype(jnp.int32), cache
+
+    return serve_step
+
+
+def greedy_decode(model: Model, params, prompts: jnp.ndarray, n_new: int,
+                  max_len: int):
+    """Prefill via teacher-forced steps, then greedy decode n_new tokens.
+
+    prompts: (B, P) int32. Returns (B, n_new) int32.
+    """
+    B, P = prompts.shape
+    cache = model.init_cache(B, max_len, jnp.float32)
+    step = jax.jit(make_serve_step(model))
+    tok = prompts[:, :1]
+    out = []
+    for t in range(P + n_new - 1):
+        batch = {"tokens": tok, "cur": jnp.asarray(t, jnp.int32)}
+        nxt, cache = step(params, cache, batch)
+        if t + 1 < P:
+            tok = prompts[:, t + 1:t + 2]
+        else:
+            tok = nxt[:, None]
+            out.append(nxt)
+    return jnp.stack(out, axis=1)

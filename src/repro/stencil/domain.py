@@ -1,0 +1,41 @@
+"""3D domain decomposition over a device mesh."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+__all__ = ["Decomposition3D", "make_stencil_mesh"]
+
+STENCIL_AXES = ("dx", "dy", "dz")
+
+
+def make_stencil_mesh(shape: tuple[int, int, int]) -> jax.sharding.Mesh:
+    """Mesh for the stencil app. Axis order (dx,dy,dz) = (slab,row,col)."""
+    return jax.make_mesh(shape, STENCIL_AXES)
+
+
+@dataclass(frozen=True)
+class Decomposition3D:
+    """Global (Mg)³ cube split into P = px·py·pz local (Mg/p)³ blocks."""
+    global_M: int
+    procs: tuple[int, int, int]
+
+    @property
+    def local_shape(self) -> tuple[int, int, int]:
+        px, py, pz = self.procs
+        assert self.global_M % px == 0 and self.global_M % py == 0 \
+            and self.global_M % pz == 0, (self.global_M, self.procs)
+        return (self.global_M // px, self.global_M // py, self.global_M // pz)
+
+    def check_local_pow2_cube(self) -> int:
+        """SFC orderings need the local block to be a 2^m cube."""
+        lx, ly, lz = self.local_shape
+        if not (lx == ly == lz):
+            raise ValueError(f"local block must be cubic, got {self.local_shape}")
+        m = int(lx).bit_length() - 1
+        if (1 << m) != lx:
+            raise ValueError(f"local edge must be a power of 2, got {lx}")
+        return lx

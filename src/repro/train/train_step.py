@@ -1,0 +1,76 @@
+"""The jit'd training step: loss → grads → AdamW, with grad accumulation.
+
+``make_train_step`` builds a pure (params, opt_state, batch) -> (params,
+opt_state, metrics) function. Microbatching is a ``lax.scan`` over
+leading batch splits with f32 gradient accumulation (bf16 activations,
+f32 master weights/optimizer — standard mixed precision). Sharding is
+applied by the caller (launch/train.py, launch/dryrun.py) via
+in_shardings/out_shardings built from the model's PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.zoo import Model
+
+from .optimizer import OptConfig, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step", "make_eval_step"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1
+    remat: bool | str = True  # True | False | "dots"
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    def loss_for_grads(params, batch):
+        loss, (ce, aux) = model.loss(params, batch, remat=tcfg.remat)
+        return loss, (ce, aux)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            n = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(loss_for_grads,
+                                                  has_aux=True)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (gzero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = lsum / n
+        else:
+            (loss, _), grads = jax.value_and_grad(loss_for_grads,
+                                                  has_aux=True)(params, batch)
+        new_params, new_state, om = adamw_update(params, grads, opt_state,
+                                                 tcfg.opt)
+        metrics = {"loss": loss, **om}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    def eval_step(params, batch):
+        loss, (ce, aux) = model.loss(params, batch, remat=False)
+        return {"loss": loss, "ce": ce, "aux": aux}
+    return eval_step

@@ -1,0 +1,127 @@
+"""Cache model (Alg. 1) + offset histograms: paper-quantitative checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HILBERT, MORTON, ROW_MAJOR, cache_misses, offset_histogram,
+    offset_summary, simulate_lru, surface_cache_misses,
+)
+from repro.core.surfaces import run_stats, surface_path_indices, surface_runs
+
+
+def test_row_major_closed_form():
+    """§3.1: row-major has exactly (2g+1)³ offsets, each with count (M-2g)³."""
+    for M, g in [(16, 1), (16, 2), (32, 1)]:
+        keys, cnts = offset_histogram(ROW_MAJOR, M, g)
+        assert len(keys) == (2 * g + 1) ** 3
+        assert (cnts == (M - 2 * g) ** 3).all()
+        # offsets are exactly {dk·M² + di·M + dj}
+        r = np.arange(-g, g + 1)
+        want = sorted(int(a * M * M + b * M + c)
+                      for a in r for b in r for c in r)
+        assert keys.tolist() == want
+
+
+def test_sfc_histograms_scatter_but_localise():
+    """Figs 5-6: SFC orderings scatter offsets more widely, yet put a larger
+    fraction of accesses within a cache line."""
+    M, g = 32, 1
+    rm = offset_summary(ROW_MAJOR, M, g)
+    mo = offset_summary(MORTON, M, g)
+    hi = offset_summary(HILBERT, M, g)
+    assert mo.n_distinct > rm.n_distinct
+    assert hi.n_distinct > rm.n_distinct
+    assert mo.frac_within_line > rm.frac_within_line
+    assert hi.frac_within_line > rm.frac_within_line
+
+
+def test_histogram_total_counts():
+    M, g = 16, 1
+    for spec in (ROW_MAJOR, MORTON, HILBERT):
+        _, cnts = offset_histogram(spec, M, g)
+        assert cnts.sum() == (M - 2 * g) ** 3 * (2 * g + 1) ** 3
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=200),
+       st.integers(1, 12))
+@settings(deadline=None)
+def test_lru_invariants(seq, c):
+    lines = np.asarray(seq)
+    misses = simulate_lru(lines, c)
+    distinct = len(set(seq))
+    assert distinct <= misses <= len(seq)
+    # infinite cache -> cold misses only
+    assert simulate_lru(lines, 10**6) == distinct
+    # capacity monotonicity
+    assert simulate_lru(lines, c + 1) <= misses
+
+
+def test_lru_eviction_order():
+    # capacity 2, sequence 0 1 0 2 1: misses = 0,1,2 cold + 1 (evicted by 2)
+    assert simulate_lru(np.array([0, 1, 0, 2, 1]), 2) == 4
+
+
+def test_surface_misses_sr_pathology():
+    """Figs 11/16: with row-major layout the slab-row faces miss ~b× more
+    than the contiguous faces; SFC layouts are near-uniform across faces."""
+    M, g, b, c = 32, 1, 8, 64
+    rm = {f: surface_cache_misses(ROW_MAJOR, M, g, b, c, f)
+          for f in ("k0", "i0", "j0")}
+    assert rm["j0"] >= 4 * rm["k0"]  # sr face pathological
+    for spec in (MORTON, HILBERT):
+        s = {f: surface_cache_misses(spec, M, g, b, c, f)
+             for f in ("k0", "i0", "j0")}
+        vals = np.array(list(s.values()), float)
+        assert vals.max() / vals.min() <= 1.5  # near-uniform
+        assert vals.max() < rm["j0"]           # beats the rm pathology
+
+
+def test_interior_cache_misses_sane():
+    M, g, b, c = 16, 1, 8, 32
+    n_interior = (M - 2 * g) ** 3
+    for spec in (ROW_MAJOR, MORTON, HILBERT):
+        m = cache_misses(spec, M, g, b, c)
+        assert m >= M ** 3 / b * 0.5       # at least ~cold misses
+        assert m <= n_interior * (2 * g + 1) ** 3
+
+
+def test_surface_run_stats():
+    """§4: pack-list run lengths. Row-major: rc face is one run, sr face is
+    all runs of 1 (stride M²). Hilbert improves the sr face even at element
+    granularity; Morton matches rm there (j is its least-significant bit)
+    but wins at cache-line granularity (test_surface_misses_sr_pathology)
+    and is near-isotropic across faces — unlike row-major."""
+    M, g = 32, 1
+    rm_rc = run_stats(ROW_MAJOR, M, g, "k0")
+    rm_sr = run_stats(ROW_MAJOR, M, g, "j0")
+    assert rm_rc.n_runs == 1 and rm_rc.max_run == M * M
+    assert rm_sr.n_runs == M * M and rm_sr.max_run == 1
+    hi_sr = run_stats(HILBERT, M, g, "j0")
+    assert hi_sr.n_runs < M * M and hi_sr.mean_run > 1.0
+    # Morton: face-isotropy — worst/best face ratio far below row-major's
+    mo = [run_stats(MORTON, M, g, f).n_runs
+          for f in ("k0", "i0", "j0")]
+    rm = [run_stats(ROW_MAJOR, M, g, f).n_runs
+          for f in ("k0", "i0", "j0")]
+    assert max(mo) / min(mo) < max(rm) / min(rm)
+
+
+def test_surface_indices_cover_face():
+    M, g = 16, 2
+    for spec in (ROW_MAJOR, MORTON, HILBERT):
+        for face in ("k0", "k1", "i0", "i1", "j0", "j1"):
+            idx = surface_path_indices(spec, M, g, face)
+            assert idx.size == g * M * M
+            assert len(np.unique(idx)) == idx.size
+            starts, lens = surface_runs(spec, M, g, face)
+            assert lens.sum() == idx.size
+
+
+@pytest.mark.parametrize("spec", [ROW_MAJOR, MORTON, HILBERT],
+                         ids=lambda s: s.name)
+def test_surface_variant_stencil_mode(spec):
+    m = surface_cache_misses(spec, 16, 1, 8, 64, "k0", stencil=True)
+    m0 = surface_cache_misses(spec, 16, 1, 8, 64, "k0", stencil=False)
+    assert m >= m0  # stencil touches strictly more data

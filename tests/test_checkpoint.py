@@ -1,0 +1,95 @@
+"""Checkpoint/restart: bit-exactness, atomicity, async, elastic restore."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data import TokenPipeline
+from repro.models import build_model
+from repro.models.config import ModelConfig
+from repro.train import (OptConfig, TrainConfig, Trainer, TrainerConfig)
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=128,
+                  activation_dtype="float32")
+
+
+@pytest.fixture()
+def tmp_ckpt(tmp_path):
+    return str(tmp_path / "ckpt")
+
+
+def test_save_restore_roundtrip(tmp_ckpt):
+    tree = {"a": {"b": jnp.arange(10, dtype=jnp.float32)},
+            "c": jnp.ones((3, 4), jnp.bfloat16)}
+    ckpt.save(tmp_ckpt, 7, tree, meta={"step": 7, "note": "x"})
+    got, meta = ckpt.restore(tmp_ckpt)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(np.asarray(got["a"]["b"]),
+                                  np.asarray(tree["a"]["b"]))
+    assert got["c"].dtype == np.dtype(jnp.bfloat16)
+
+
+def test_latest_step_and_atomicity(tmp_ckpt):
+    tree = {"x": jnp.zeros(4)}
+    ckpt.save(tmp_ckpt, 1, tree, meta={"step": 1})
+    ckpt.save(tmp_ckpt, 5, tree, meta={"step": 5})
+    # a torn (tmp) checkpoint must be invisible to restore
+    os.makedirs(os.path.join(tmp_ckpt, ".tmp_step_00000009"))
+    assert ckpt.latest_step(tmp_ckpt) == 5
+    _, meta = ckpt.restore(tmp_ckpt)
+    assert meta["step"] == 5
+
+
+def test_async_save(tmp_ckpt):
+    tree = {"x": jnp.arange(1000, dtype=jnp.float32)}
+    ckpt.save_async(tmp_ckpt, 3, tree, meta={"step": 3})
+    ckpt.wait()
+    got, _ = ckpt.restore(tmp_ckpt, 3)
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.arange(1000))
+
+
+def test_restart_bit_exact(tmp_ckpt):
+    """Kill after 3 steps, resume, final params identical to an unbroken run."""
+    model = build_model(CFG)
+    pipe = TokenPipeline(vocab=128, batch=4, seq=16, seed=0)
+    tcn = TrainConfig(opt=OptConfig(warmup_steps=2, total_steps=6))
+
+    full = Trainer(model, pipe, TrainerConfig(
+        total_steps=6, ckpt_every=3, ckpt_dir=tmp_ckpt + "_full", log_every=100,
+        train=tcn))
+    p_full, _, _ = full.run(resume=False)
+
+    Trainer(model, pipe, TrainerConfig(
+        total_steps=3, ckpt_every=3, ckpt_dir=tmp_ckpt, log_every=100,
+        train=tcn)).run(resume=False)
+    resumed = Trainer(model, pipe, TrainerConfig(
+        total_steps=6, ckpt_every=3, ckpt_dir=tmp_ckpt, log_every=100,
+        train=tcn))
+    p_res, _, _ = resumed.run(resume=True)
+
+    for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_res)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_with_shardings(tmp_ckpt):
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(tmp_ckpt, 1, tree, meta={"step": 1})
+    sh = {"w": jax.sharding.SingleDeviceSharding(jax.devices()[0])}
+    got, _ = ckpt.restore(tmp_ckpt, shardings=sh)
+    assert got["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(tree["w"]))
+
+
+def test_overwrite_same_step(tmp_ckpt):
+    ckpt.save(tmp_ckpt, 2, {"x": jnp.zeros(2)}, meta={"step": 2, "v": 1})
+    ckpt.save(tmp_ckpt, 2, {"x": jnp.ones(2)}, meta={"step": 2, "v": 2})
+    got, meta = ckpt.restore(tmp_ckpt, 2)
+    assert meta["v"] == 2
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.ones(2))

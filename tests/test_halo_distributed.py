@@ -1,0 +1,74 @@
+"""Distributed halo exchange vs global oracle — 8 fake devices, subprocess.
+
+Runs in a subprocess because XLA locks the host device count at first jax
+init (the main pytest process must keep seeing 1 device for the smoke
+tests — the dry-run has the same constraint, per the assignment)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import ROW_MAJOR, MORTON, HILBERT, apply_ordering, undo_ordering
+from repro.stencil import make_stencil_mesh, make_distributed_step
+from repro.kernels import ref as kref
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+mesh = make_stencil_mesh((2, 2, 2))
+local_M, g, GM = 8, %d, 16
+rng = np.random.default_rng(3)
+gcube = (rng.random((GM, GM, GM)) < 0.35).astype(np.float32)
+
+for spec in (ROW_MAJOR, MORTON, HILBERT):
+    st = np.zeros((2, 2, 2, local_M ** 3), np.float32)
+    for a in range(2):
+        for b in range(2):
+            for c in range(2):
+                loc = gcube[a*8:(a+1)*8, b*8:(b+1)*8, c*8:(c+1)*8]
+                st[a, b, c] = np.asarray(apply_ordering(jnp.asarray(loc), spec))
+    gs = jax.device_put(jnp.asarray(st), NamedSharding(mesh, P("dx", "dy", "dz")))
+    step = make_distributed_step(mesh, spec, local_M, g)
+    out = np.asarray(jax.block_until_ready(step(gs)))
+    want = np.asarray(kref.gol3d_step_ref(jnp.asarray(gcube), g))
+    got = np.zeros_like(gcube)
+    for a in range(2):
+        for b in range(2):
+            for c in range(2):
+                got[a*8:(a+1)*8, b*8:(b+1)*8, c*8:(c+1)*8] = np.asarray(
+                    undo_ordering(jnp.asarray(out[a, b, c]), spec, local_M))
+    assert (got == want).all(), spec.name
+print("DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.parametrize("g", [1, 2])
+def test_distributed_gol3d_matches_global_oracle(g):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _SCRIPT % g],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert "DISTRIBUTED_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_hilbert_device_permutation_adjacency():
+    """mesh.py: consecutive devices in Hilbert order are torus-adjacent."""
+    import numpy as np
+    from repro.launch.mesh import _device_coords, hilbert_device_permutation
+
+    class FakeDev:
+        def __init__(self, i, coords):
+            self.id = i
+            self.coords = coords
+
+    # an 4x4x4 torus
+    devs = [FakeDev(i, tuple(np.unravel_index(i, (4, 4, 4)))) for i in range(64)]
+    perm = hilbert_device_permutation(devs)
+    coords = np.array([d.coords for d in perm])
+    steps = np.abs(np.diff(coords, axis=0)).sum(1)
+    assert steps.max() == 1  # every hop is a single ICI link
+    assert sorted(d.id for d in perm) == list(range(64))

@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) for the SFC core invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    HILBERT, MORTON, ROW_MAJOR, OrderingSpec, hilbert_decode3,
+    hilbert_encode3, morton_decode3, morton_encode3, path_to_rmo, rmo_to_path,
+)
+from repro.core.hilbert import hilbert_decode, hilbert_encode
+from repro.core.morton import (
+    dilate2, dilate3, morton_decode3_level, morton_encode3_level, undilate2,
+    undilate3,
+)
+from repro.core.orderings import path_index_2d
+
+
+@given(st.lists(st.integers(0, 2**21 - 1), min_size=1, max_size=64))
+def test_dilate3_roundtrip(xs):
+    x = np.asarray(xs, dtype=np.uint64)
+    assert (undilate3(dilate3(x)) == x).all()
+
+
+@given(st.lists(st.integers(0, 2**32 - 1), min_size=1, max_size=64))
+def test_dilate2_roundtrip(xs):
+    x = np.asarray(xs, dtype=np.uint64)
+    assert (undilate2(dilate2(x)) == x).all()
+
+
+@given(st.integers(0, 2**20 - 1), st.integers(0, 2**20 - 1),
+       st.integers(0, 2**20 - 1))
+def test_morton3_roundtrip(k, i, j):
+    idx = morton_encode3(np.uint64(k), np.uint64(i), np.uint64(j))
+    kk, ii, jj = morton_decode3(idx)
+    assert (int(kk), int(ii), int(jj)) == (k, i, j)
+
+
+@given(st.integers(2, 5), st.data())
+def test_morton_level_roundtrip(m, data):
+    M = 1 << m
+    r = data.draw(st.integers(0, m))
+    coords = data.draw(st.lists(st.integers(0, M - 1), min_size=3, max_size=3))
+    k, i, j = (np.uint64(c) for c in coords)
+    idx = morton_encode3_level(k, i, j, m, r)
+    kk, ii, jj = morton_decode3_level(idx, m, r)
+    assert (int(kk), int(ii), int(jj)) == tuple(coords)
+
+
+@given(st.integers(2, 5))
+@settings(deadline=None, max_examples=4)
+def test_morton_level_bijective(m):
+    M = 1 << m
+    kk, ii, jj = np.meshgrid(*(np.arange(M, dtype=np.uint64),) * 3,
+                             indexing="ij")
+    for r in range(m + 1):
+        idx = morton_encode3_level(kk.ravel(), ii.ravel(), jj.ravel(), m, r)
+        assert len(np.unique(idx)) == M ** 3
+
+
+@given(st.integers(2, 5), st.integers(2, 5), st.integers(2, 5),
+       st.integers(2, 4))
+def test_hilbert3_roundtrip(k, i, j, m):
+    M = 1 << m
+    k, i, j = k % M, i % M, j % M
+    idx = hilbert_encode3(np.uint64(k), np.uint64(i), np.uint64(j), m)
+    kk, ii, jj = hilbert_decode3(idx, m)
+    assert (int(kk), int(ii), int(jj)) == (k, i, j)
+
+
+@pytest.mark.parametrize("m", [2, 3, 4])
+def test_hilbert3_unit_neighbour(m):
+    """Consecutive Hilbert positions are grid neighbours (|Δ|₁ == 1) —
+    the continuity property Morton lacks (paper footnote 1)."""
+    M = 1 << m
+    kk, ii, jj = np.meshgrid(*(np.arange(M, dtype=np.uint64),) * 3,
+                             indexing="ij")
+    h = hilbert_encode3(kk.ravel(), ii.ravel(), jj.ravel(), m)
+    q = np.empty(M ** 3, np.int64)
+    q[h.astype(np.int64)] = np.arange(M ** 3)
+    coords = np.stack([kk.ravel(), ii.ravel(), jj.ravel()], 1).astype(np.int64)[q]
+    steps = np.abs(np.diff(coords, axis=0)).sum(1)
+    assert steps.max() == 1
+    assert (coords[0] == 0).all()
+
+
+@pytest.mark.parametrize("b", [2, 3, 4])
+def test_hilbert2_unit_neighbour(b):
+    n = 1 << b
+    ii, jj = np.meshgrid(np.arange(n, dtype=np.uint64),
+                         np.arange(n, dtype=np.uint64), indexing="ij")
+    h = hilbert_encode([ii.ravel(), jj.ravel()], b)
+    q = np.empty(n * n, np.int64)
+    q[h.astype(np.int64)] = np.arange(n * n)
+    c = np.stack([ii.ravel(), jj.ravel()], 1).astype(np.int64)[q]
+    assert np.abs(np.diff(c, axis=0)).sum(1).max() == 1
+
+
+_SPECS = [ROW_MAJOR, MORTON, HILBERT,
+          OrderingSpec("column_major"),
+          OrderingSpec("morton", level=1),
+          OrderingSpec("morton", level=2),
+          OrderingSpec("hybrid", tile=4, outer="hilbert", inner="row_major"),
+          OrderingSpec("hybrid", tile=4, outer="morton", inner="hilbert"),
+          OrderingSpec("hybrid", tile=2, outer="row_major", inner="morton")]
+
+
+@pytest.mark.parametrize("spec", _SPECS, ids=lambda s: s.name)
+@pytest.mark.parametrize("M", [8, 16])
+def test_permutations_inverse(spec, M):
+    p = rmo_to_path(spec, M)
+    q = path_to_rmo(spec, M)
+    n = M ** 3
+    assert (np.sort(p) == np.arange(n)).all()
+    assert (p[q] == np.arange(n)).all()
+    assert (q[p] == np.arange(n)).all()
+
+
+def test_row_major_is_identity():
+    assert (rmo_to_path(ROW_MAJOR, 8) == np.arange(512)).all()
+
+
+def test_morton_full_depth_first_block():
+    """Fig. 1: full Morton visits the (0..1)³ block first, row-major inside."""
+    q = path_to_rmo(MORTON, 4)
+    M = 4
+    first8 = q[:8]
+    coords = np.stack([first8 // (M * M), (first8 // M) % M, first8 % M], 1)
+    want = [(0, 0, 0), (0, 0, 1), (0, 1, 0), (0, 1, 1),
+            (1, 0, 0), (1, 0, 1), (1, 1, 0), (1, 1, 1)]
+    assert [tuple(c) for c in coords] == want
+
+
+@pytest.mark.parametrize("kind", ["row_major", "morton", "hilbert"])
+@pytest.mark.parametrize("n", [4, 8])
+def test_path_index_2d_is_permutation(kind, n):
+    seq = path_index_2d(kind, n)
+    assert (np.sort(seq) == np.arange(n * n)).all()
