@@ -20,9 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache_model import simulate_lru
+from repro.core.layout import blockize, blockize_with_halo
+from repro.core.neighbors import FACE_COLS, SELF_COL, neighbor_table, neighbor_table_device
 from repro.kernels.flash_attn import build_schedule, flash_attention_fwd
-from repro.kernels.stencil3d import stencil_sum_blocks
-from repro.core.layout import block_order
+from repro.kernels.stencil3d import stencil_sum_blocks, stencil_sum_resident
 
 
 def _attention_block_stream(nq, nk, kind, causal=True):
@@ -53,21 +54,20 @@ def attention_schedule_rows(nq: int = 32, nk: int = 32, vmem_blocks: int = 24):
 
 def stencil_block_rows(nt: int = 8, vmem_blocks: int = 8):
     """Stencil block walk: consecutive blocks share halos; the LRU model
-    counts how often a neighbour block is still VMEM-resident."""
+    counts how often a neighbour block is still VMEM-resident. The fetch
+    stream is exactly what the resident kernel's index maps emit: the
+    block itself plus its -x/-y/-z face neighbours from the SFC
+    neighbour table (core/neighbors.py)."""
     out = []
+    lo_cols = FACE_COLS[0], FACE_COLS[2], FACE_COLS[4]  # k-, i-, j-
     for kind in ("row_major", "morton", "hilbert"):
         t0 = time.perf_counter()
-        bo = block_order(kind, nt)
-        # stream: each step touches the block and its -x/-y/-z face
-        # neighbours (already-produced halo data reused if resident)
-        lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
+        tab = neighbor_table(kind, nt)  # (nb, 27) path->path, periodic
         stream = []
         for t in range(nt ** 3):
-            k, i, j = bo[t]
-            stream.append(int(lin[t]))
-            for dk, di, dj in ((-1, 0, 0), (0, -1, 0), (0, 0, -1)):
-                nk_, ni, nj = (k + dk) % nt, (i + di) % nt, (j + dj) % nt
-                stream.append(int(nk_ * nt * nt + ni * nt + nj))
+            stream.append(int(tab[t, SELF_COL]))
+            for col in lo_cols:
+                stream.append(int(tab[t, col]))
         misses = simulate_lru(np.asarray(stream), vmem_blocks)
         dt = (time.perf_counter() - t0) * 1e6
         out.append((f"kernel/stencil_walk_{kind}_nt{nt}", dt,
@@ -100,6 +100,42 @@ def interpret_timing_rows():
     return out
 
 
+def resident_kernel_rows(M: int = 16, T: int = 8, g: int = 1,
+                         kind: str = "hilbert"):
+    """Repack vs resident kernel on the same cube (interpret mode, CPU):
+    times both forms and reports the modelled per-step HBM stream — the
+    resident form reads (T+2g)³/block with no halo store and no repack."""
+    rng = np.random.default_rng(0)
+    cube = jnp.asarray(rng.normal(size=(M, M, M)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(2 * g + 1,) * 3).astype(np.float32))
+    nb = (M // T) ** 3
+    W3 = (T + 2 * g) ** 3
+    out = []
+
+    halo = blockize_with_halo(cube, T, g, kind=kind)
+    stencil_sum_blocks(halo, w, g=g)  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        # the repack form rebuilds the halo store every step
+        r = stencil_sum_blocks(blockize_with_halo(cube, T, g, kind=kind), w, g=g)
+    jax.block_until_ready(r)
+    out.append((f"kernel/stencil_repack_interpret_{kind}",
+                (time.perf_counter() - t0) / 3 * 1e6,
+                f"T={T};g={g};nb={nb};hbm_items_per_step={M**3 + 2 * nb * W3 + nb * T**3}"))
+
+    store = blockize(cube, T, kind=kind)
+    nbr = neighbor_table_device(kind, M // T)
+    stencil_sum_resident(store, w, nbr, g=g)  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        r = stencil_sum_resident(store, w, nbr, g=g)
+    jax.block_until_ready(r)
+    out.append((f"kernel/stencil_resident_interpret_{kind}",
+                (time.perf_counter() - t0) / 3 * 1e6,
+                f"T={T};g={g};nb={nb};hbm_items_per_step={nb * W3 + nb * T**3}"))
+    return out
+
+
 def rows():
     return (attention_schedule_rows() + stencil_block_rows()
-            + interpret_timing_rows())
+            + interpret_timing_rows() + resident_kernel_rows())

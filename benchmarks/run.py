@@ -3,23 +3,48 @@
 Prints ``name,us_per_call,derived`` CSV. Modules:
   offset_hist     — Figs 5-7  (offset histograms)
   cache_misses    — Figs 16-20 (surface miss counts, model)
-  stencil_update  — Figs 8-10/12-14 (update timings)
+  stencil_update  — Figs 8-10/12-14 (update timings) + repack-vs-resident
   halo_pack       — Figs 11/15 (pack timings + DMA runs)
   kernel_bench    — Pallas schedules scored by the paper's LRU model
   roofline_table  — §Roofline rows from the dry-run artefacts
+
+Flags:
+  --fast          smaller sizes (CI-friendly)
+  --json PATH     additionally write the rows as a JSON list of
+                  {"name", "us_per_call", "derived": {k: v}} objects —
+                  the machine-readable form the perf trajectory tracking
+                  consumes (derived "k=v;k=v" strings are split; numeric
+                  values are parsed).
 """
 
 from __future__ import annotations
 
+import json
 import sys
 
 
-def main() -> None:
+def _parse_derived(derived: str) -> dict:
+    out: dict[str, object] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            if part:
+                out[part] = True
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def collect(fast: bool = False) -> list[tuple[str, float, str]]:
     from . import (cache_misses, halo_pack, kernel_bench, offset_hist,
                    roofline_table, stencil_update)
 
-    fast = "--fast" in sys.argv
-    print("name,us_per_call,derived")
     sections = [
         offset_hist.rows(),
         cache_misses.rows(M=32 if fast else 64),
@@ -30,9 +55,30 @@ def main() -> None:
         kernel_bench.rows(),
         roofline_table.rows(),
     ]
-    for rows in sections:
-        for name, us, derived in rows:
-            print(f"{name},{us:.1f},{derived}")
+    return [row for rows in sections for row in rows]
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    json_path = None
+    if "--json" in sys.argv:
+        i = sys.argv.index("--json")
+        if i + 1 >= len(sys.argv):
+            raise SystemExit("--json needs a path argument")
+        json_path = sys.argv[i + 1]
+
+    rows = collect(fast=fast)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+    if json_path:
+        payload = [{"name": name, "us_per_call": round(us, 1),
+                    "derived": _parse_derived(derived)}
+                   for name, us, derived in rows]
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(payload)} rows to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

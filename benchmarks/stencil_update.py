@@ -4,6 +4,13 @@ gol3d with orderings ∈ {row-major, Morton, Hilbert}, stencil g ∈ {1, 2},
 M ∈ {32, 64} (the paper's 64–256 scaled to this container's single CPU
 core; the ordering *comparison* is the object, not absolute time).
 Times the jit'd SFC-blocked update pipeline end-to-end.
+
+The ``resident/`` rows compare the two pipeline forms (DESIGN.md §3) on
+the same workload: per-step *repack* (blockize_with_halo every step)
+vs the fused *resident* block store (stencil/pipeline.py). ``derived``
+carries the modelled per-step HBM bytes of each form — the resident
+path must move strictly fewer bytes for K ≥ 2 since it has no
+((T+2g)/T)³ halo duplication and no per-step O(M³) repack.
 """
 
 from __future__ import annotations
@@ -13,7 +20,8 @@ import time
 import jax
 
 from repro.core import HILBERT, MORTON, ROW_MAJOR
-from repro.stencil import Gol3d, Gol3dConfig
+from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
+                           repack_bytes_per_step, resident_bytes_per_step)
 
 N_ITERS = 10
 
@@ -36,4 +44,33 @@ def rows(sizes=(32, 64), stencils=(1, 2)):
                 out.append((f"fig8_14/update_M{M}_g{g}_{spec.name}",
                             dt * 1e6 / N_ITERS,
                             f"ns_per_item={per_item_ns:.2f}"))
+    out += resident_rows(sizes=sizes, stencils=stencils)
+    return out
+
+
+def resident_rows(sizes=(32, 64), stencils=(1, 2), T=8, n_steps=N_ITERS):
+    """Repack vs resident: steps/sec (jnp path, end-to-end) + modelled bytes."""
+    out = []
+    for M in sizes:
+        for g in stencils:
+            rep_b = repack_bytes_per_step(M, T, g)
+            res_b = resident_bytes_per_step(M, T, g, n_steps)
+            for kind in ("morton", "hilbert"):
+                pipe = ResidentPipeline(M=M, T=T, g=g, kind=kind)
+                app = Gol3d(Gol3dConfig(M=M, g=g, block_T=T))
+                cube = app.cube
+                run = pipe.run_fn(n_steps)
+                store = jax.block_until_ready(run(pipe.to_blocks(cube)))  # warm
+                store = pipe.to_blocks(cube)
+                t0 = time.perf_counter()
+                store = jax.block_until_ready(run(store))
+                dt = time.perf_counter() - t0
+                out.append((
+                    f"resident/update_M{M}_g{g}_T{T}_{kind}",
+                    dt * 1e6 / n_steps,
+                    f"steps_per_s={n_steps / dt:.1f}"
+                    f";resident_bytes_per_step={res_b:.0f}"
+                    f";repack_bytes_per_step={rep_b:.0f}"
+                    f";bytes_ratio={res_b / rep_b:.3f}",
+                ))
     return out

@@ -20,3 +20,7 @@ from .layout import (  # noqa: F401
     apply_ordering, undo_ordering, blockize, unblockize, blockize_with_halo,
     block_order,
 )
+from .neighbors import (  # noqa: F401
+    OFFSETS_FULL, OFFSETS_FACE, FACE_COLS, SELF_COL,
+    block_kind_of, neighbor_table, neighbor_table_device, ring_perms,
+)

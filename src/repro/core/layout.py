@@ -14,28 +14,69 @@ from __future__ import annotations
 
 import functools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .orderings import OrderingSpec, path_to_rmo, rmo_to_path, _check_pow2, _flat_index
 
 __all__ = [
-    "apply_ordering", "undo_ordering",
+    "apply_ordering", "undo_ordering", "device_constant",
     "block_order", "blockize", "unblockize", "blockize_with_halo",
 ]
+
+
+_DEVICE_CONSTANTS: dict = {}
+_DEVICE_CONSTANTS_CAP = 256
+
+
+def device_constant(key, build):
+    """Memoised device copy of a precomputed (numpy) table.
+
+    Re-wrapping cached numpy tables at every trace made each jit embed a
+    fresh device constant; memoising the jnp array lets repeated jits
+    reuse one buffer. Creating a device array is only safe *outside*
+    tracing (inside jit/shard_map traces ``jnp.asarray`` yields a trace-
+    local tracer — caching it would leak), so under a trace this returns
+    the numpy table unmemoised — exactly the seed behaviour — while
+    eager call sites (e.g. Gol3d.__post_init__) populate the cache for
+    every later trace to reuse.
+
+    key:   hashable identity of the table
+    build: zero-arg callable producing the numpy array (cheap: the
+           numpy side is lru_cached upstream)
+    """
+    hit = _DEVICE_CONSTANTS.get(key)
+    if hit is not None:
+        return hit
+    arr = build()
+    if jax.core.trace_state_clean():
+        arr = jnp.asarray(arr)
+        while len(_DEVICE_CONSTANTS) >= _DEVICE_CONSTANTS_CAP:  # FIFO cap:
+            # device buffers are large (a M=256 permutation is 64 MiB)
+            _DEVICE_CONSTANTS.pop(next(iter(_DEVICE_CONSTANTS)))
+        _DEVICE_CONSTANTS[key] = arr
+    return arr
+
+
+def _perm_device(spec: OrderingSpec, M: int, inverse: bool):
+    """Device-resident copy of the (int32) permutation, created once."""
+    return device_constant(
+        ("perm", spec, M, inverse),
+        lambda: rmo_to_path(spec, M) if inverse else path_to_rmo(spec, M))
 
 
 def apply_ordering(x: jnp.ndarray, spec: OrderingSpec) -> jnp.ndarray:
     """Reorder an (M,M,M) cube into a flat (M³,) path-ordered vector."""
     M = x.shape[0]
     assert x.shape == (M, M, M), x.shape
-    q = path_to_rmo(spec, M)  # path pos -> rmo
+    q = _perm_device(spec, M, False)  # path pos -> rmo
     return x.reshape(-1)[q]
 
 
 def undo_ordering(v: jnp.ndarray, spec: OrderingSpec, M: int) -> jnp.ndarray:
     """Inverse of :func:`apply_ordering`."""
-    p = rmo_to_path(spec, M)  # rmo -> path pos
+    p = _perm_device(spec, M, True)  # rmo -> path pos
     return v[p].reshape(M, M, M)
 
 
@@ -47,6 +88,12 @@ def block_order(kind: str, nt: int) -> np.ndarray:
     position t by ordering ``kind`` over the nt×nt×nt block grid.
     """
     _check_pow2(nt)
+    if nt == 1:  # single-block grid: every curve is trivial
+        if kind not in ("row_major", "column_major", "morton", "hilbert"):
+            raise ValueError(f"unknown simple ordering {kind!r}")
+        out = np.zeros((1, 3), dtype=np.int64)
+        out.setflags(write=False)
+        return out
     kk, ii, jj = np.meshgrid(*(np.arange(nt, dtype=np.uint64),) * 3, indexing="ij")
     kk, ii, jj = kk.ravel(), ii.ravel(), jj.ravel()
     pidx = _flat_index(kind, kk, ii, jj, nt).astype(np.int64)
@@ -58,16 +105,30 @@ def block_order(kind: str, nt: int) -> np.ndarray:
     return out
 
 
+def _block_perm(kind: str, nt: int, inverse: bool) -> np.ndarray:
+    bo = block_order(kind, nt)
+    lin = (bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]).astype(np.int32)
+    if not inverse:
+        return lin
+    inv = np.empty(nt ** 3, dtype=np.int32)
+    inv[lin] = np.arange(nt ** 3, dtype=np.int32)
+    return inv
+
+
+def _block_perm_device(kind: str, nt: int, inverse: bool):
+    """Cached device copy of the block permutation (path↔linear), int32."""
+    return device_constant(("blockperm", kind, nt, inverse),
+                           lambda: _block_perm(kind, nt, inverse))
+
+
 def blockize(x: jnp.ndarray, T: int, kind: str = "morton") -> jnp.ndarray:
     """(M,M,M) -> (nb, T, T, T) with blocks in ``kind`` curve order."""
     M = x.shape[0]
     nt = M // T
     assert nt * T == M
-    bo = block_order(kind, nt)
     x6 = x.reshape(nt, T, nt, T, nt, T).transpose(0, 2, 4, 1, 3, 5)  # (nt,nt,nt,T,T,T)
     flat = x6.reshape(nt ** 3, T, T, T)
-    lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
-    return flat[lin]
+    return flat[_block_perm_device(kind, nt, False)]
 
 
 def unblockize(blocks: jnp.ndarray, M: int, kind: str = "morton") -> jnp.ndarray:
@@ -75,11 +136,8 @@ def unblockize(blocks: jnp.ndarray, M: int, kind: str = "morton") -> jnp.ndarray
     nb, T = blocks.shape[0], blocks.shape[1]
     nt = M // T
     assert nb == nt ** 3
-    bo = block_order(kind, nt)
-    lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
-    inv = np.empty(nb, dtype=np.int64)
-    inv[lin] = np.arange(nb)
-    x6 = blocks[inv].reshape(nt, nt, nt, T, T, T).transpose(0, 3, 1, 4, 2, 5)
+    x6 = blocks[_block_perm_device(kind, nt, True)]
+    x6 = x6.reshape(nt, nt, nt, T, T, T).transpose(0, 3, 1, 4, 2, 5)
     return x6.reshape(M, M, M)
 
 

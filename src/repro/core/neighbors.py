@@ -1,0 +1,130 @@
+"""Precomputed SFC block-neighbour tables (DESIGN.md §3).
+
+The resident-block pipeline (stencil/pipeline.py, kernels/stencil3d.py)
+keeps the cube as an ``(nb, T, T, T)`` curve-ordered block store for the
+whole multi-step loop — the paper's "reorder once, iterate many times"
+discipline.  Halo assembly then needs, for the block at *path position*
+``t``, the path positions of its 26 grid neighbours.  This module builds
+those tables once per ``(ordering, nt)`` pair, as int32 (they ride the
+TPU scalar-prefetch channel), with periodic and clamped variants.
+
+Offsets are enumerated in row-major order of ``(dk+1, di+1, dj+1)`` so
+that column ``(a·9 + b·3 + c)`` of a full table is the neighbour at
+offset ``(a-1, b-1, c-1)`` — the same order the kernel assembles its
+``(T+2g)³`` VMEM window in, and column :data:`SELF_COL` (= 13) is the
+block itself.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from .layout import block_order, device_constant
+from .orderings import OrderingSpec
+
+__all__ = [
+    "OFFSETS_FULL", "OFFSETS_FACE", "FACE_COLS", "SELF_COL",
+    "block_kind_of", "neighbor_table", "neighbor_table_device", "ring_perms",
+]
+
+OFFSETS_FULL = tuple((a - 1, b - 1, c - 1)
+                     for a in range(3) for b in range(3) for c in range(3))
+SELF_COL = OFFSETS_FULL.index((0, 0, 0))  # 13
+
+# face (von-Neumann) neighbours in [k-, k+, i-, i+, j-, j+] order
+OFFSETS_FACE = ((-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0),
+                (0, 0, -1), (0, 0, 1))
+FACE_COLS = tuple(OFFSETS_FULL.index(o) for o in OFFSETS_FACE)
+
+
+def block_kind_of(spec: OrderingSpec | str) -> str:
+    """Block-granularity curve induced by an ordering.
+
+    Morton and Hilbert are hierarchical: the order in which the
+    element-level curve visits T³ tiles *is* the same curve on the
+    nt³ block grid (the top 3·log2(nt) bits of the index), so the
+    element ordering's kind carries over directly. A hybrid ordering's
+    block order is its ``outer`` curve; row/column-major likewise
+    induce themselves.
+    """
+    if isinstance(spec, str):
+        return spec
+    if spec.kind == "hybrid":
+        return spec.outer
+    return spec.kind
+
+
+@functools.lru_cache(maxsize=128)
+def neighbor_table(spec: OrderingSpec | str, nt: int, *,
+                   connectivity: str = "full",
+                   periodic: bool = True) -> np.ndarray:
+    """Path-position → neighbour path-positions, int32, read-only.
+
+    spec:         OrderingSpec or block-kind string (see block_kind_of)
+    nt:           blocks per cube edge (power of 2)
+    connectivity: "full" → (nt³, 27) table over OFFSETS_FULL;
+                  "face" → (nt³, 6) table over OFFSETS_FACE
+    periodic:     wrap at the grid boundary; otherwise clamp to the edge
+                  block (note: block-level clamping replicates *blocks*,
+                  not elements — it matches jnp.pad(mode="edge") only for
+                  the face-adjacent halo layer, which is what the
+                  distributed exchange consumes).
+
+    ``table[t, o]`` is the path position of the block at offset
+    ``OFFSETS[o]`` from the block the curve visits at position ``t``.
+    """
+    if connectivity not in ("full", "face"):
+        raise ValueError(f"unknown connectivity {connectivity!r}")
+    kind = block_kind_of(spec)
+    full = _full_table(kind, nt, periodic)
+    if connectivity == "face":
+        face = full[:, FACE_COLS]
+        face.setflags(write=False)
+        return face
+    return full
+
+
+@functools.lru_cache(maxsize=128)
+def _full_table(kind: str, nt: int, periodic: bool) -> np.ndarray:
+    bo = block_order(kind, nt)  # (nb, 3): path pos -> block coords
+    nb = nt ** 3
+    lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
+    lin_to_path = np.empty(nb, dtype=np.int64)
+    lin_to_path[lin] = np.arange(nb)
+    offs = np.asarray(OFFSETS_FULL, dtype=np.int64)  # (27, 3)
+    co = bo[:, None, :] + offs[None, :, :]           # (nb, 27, 3)
+    if periodic:
+        co %= nt
+    else:
+        np.clip(co, 0, nt - 1, out=co)
+    tab = lin_to_path[(co[..., 0] * nt + co[..., 1]) * nt + co[..., 2]]
+    tab = tab.astype(np.int32)
+    tab.setflags(write=False)
+    return tab
+
+
+def neighbor_table_device(spec: OrderingSpec | str, nt: int, *,
+                          connectivity: str = "full",
+                          periodic: bool = True) -> jnp.ndarray:
+    """Cached device-resident copy (the kernel's scalar-prefetch operand)."""
+    kind = block_kind_of(spec)
+    return device_constant(
+        ("nbrtab", kind, nt, connectivity, periodic),
+        lambda: neighbor_table(kind, nt, connectivity=connectivity,
+                               periodic=periodic))
+
+
+def ring_perms(n: int) -> tuple[list[tuple[int, int]], list[tuple[int, int]]]:
+    """(forward, backward) ppermute partner lists for a periodic ring.
+
+    The 1D special case of the face tables — device ``i``'s +axis
+    neighbour is ``i+1 mod n`` — kept here so stencil/halo.py's exchange
+    and the block tables share one source of neighbour conventions.
+    (Direct formula: device meshes need not be powers of 2.)
+    """
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    return fwd, bwd

@@ -93,6 +93,14 @@ def _check_pow2(M: int) -> int:
     return m
 
 
+def _check_int32(n: int) -> None:
+    """Permutations are int32 (DESIGN.md §2): half the gather-index traffic
+    and half the scalar-prefetch bytes of int64. Fine while indices fit."""
+    if n >= 2 ** 31:
+        raise ValueError(f"index space {n} overflows int32 permutations; "
+                         "int32 is required for the TPU gather/prefetch path")
+
+
 def _flat_index(kind: str, k, i, j, M: int) -> np.ndarray:
     """Path index of each (k,i,j) under a *simple* (non-hybrid) ordering."""
     m = _check_pow2(M)
@@ -113,8 +121,9 @@ def _flat_index(kind: str, k, i, j, M: int) -> np.ndarray:
 
 @functools.lru_cache(maxsize=128)
 def rmo_to_path(spec: OrderingSpec, M: int) -> np.ndarray:
-    """p: row-major index -> path position. int64 array of length M³."""
+    """p: row-major index -> path position. int32 array of length M³."""
     m = _check_pow2(M)
+    _check_int32(M ** 3)
     kk, ii, jj = np.meshgrid(
         np.arange(M, dtype=np.uint64),
         np.arange(M, dtype=np.uint64),
@@ -137,7 +146,7 @@ def rmo_to_path(spec: OrderingSpec, M: int) -> np.ndarray:
         p = outer_idx * np.uint64(T * T * T) + inner_idx
     else:  # pragma: no cover
         raise ValueError(spec.kind)
-    p = p.astype(np.int64)
+    p = p.astype(np.int32)
     p.setflags(write=False)
     return p
 
@@ -147,7 +156,7 @@ def path_to_rmo(spec: OrderingSpec, M: int) -> np.ndarray:
     """q: path position -> row-major index (inverse permutation of p)."""
     p = rmo_to_path(spec, M)
     q = np.empty_like(p)
-    q[p] = np.arange(p.size, dtype=np.int64)
+    q[p] = np.arange(p.size, dtype=np.int32)
     q.setflags(write=False)
     return q
 

@@ -9,7 +9,8 @@
 
 from .ops import (  # noqa: F401
     gol3d_step, pack_surface, unpack_surface, flash_attention, sfc_gather_take,
+    uniform_weights,
 )
-from .stencil3d import stencil_sum_blocks  # noqa: F401
+from .stencil3d import stencil_sum_blocks, stencil_sum_resident  # noqa: F401
 from .sfc_gather import gather_rows  # noqa: F401
 from .flash_attn import flash_attention_fwd, build_schedule  # noqa: F401

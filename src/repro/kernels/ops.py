@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.layout import blockize_with_halo, unblockize
+from repro.core.layout import blockize_with_halo, device_constant, unblockize
 from repro.core.orderings import OrderingSpec
 from repro.core.surfaces import surface_path_indices
 
@@ -24,15 +24,29 @@ from .sfc_gather import gather_rows
 from .stencil3d import stencil_sum_blocks
 
 __all__ = ["gol3d_step", "pack_surface", "unpack_surface",
-           "flash_attention", "sfc_gather_take"]
+           "flash_attention", "sfc_gather_take", "uniform_weights"]
 
 
-def _uniform_weights(g: int) -> jnp.ndarray:
-    """All-ones stencil with a zero centre (neighbour count)."""
+def _build_uniform_weights(g: int) -> np.ndarray:
     s = 2 * g + 1
     w = np.ones((s, s, s), dtype=np.float32)
     w[g, g, g] = 0.0
-    return jnp.asarray(w)
+    return w
+
+
+def uniform_weights(g: int):
+    """All-ones stencil with a zero centre (neighbour count).
+
+    Cached device constant: repeated jits of the stencil pipelines reuse
+    one buffer instead of re-uploading per trace.
+    """
+    return device_constant(("golw", g), lambda: _build_uniform_weights(g))
+
+
+def _surface_idx_device(spec: OrderingSpec, M: int, g: int, face: str):
+    """Cached device copy of a face's path-index list (int32)."""
+    return device_constant(("surfidx", spec, M, g, face),
+                           lambda: surface_path_indices(spec, M, g, face))
 
 
 @functools.partial(jax.jit, static_argnames=("g", "block_kind", "T", "use_kernel", "interpret"))
@@ -47,10 +61,10 @@ def gol3d_step(cube: jnp.ndarray, *, g: int, T: int = 8,
     M = cube.shape[0]
     blocks = blockize_with_halo(cube, T, g, kind=block_kind, periodic=True)
     if use_kernel:
-        neigh = stencil_sum_blocks(blocks, _uniform_weights(g), g=g,
+        neigh = stencil_sum_blocks(blocks, uniform_weights(g), g=g,
                                    interpret=interpret)
     else:
-        neigh = ref.stencil_sum_ref(blocks, _uniform_weights(g))
+        neigh = ref.stencil_sum_ref(blocks, uniform_weights(g))
     centre = blocks[:, g:g + T, g:g + T, g:g + T]
     nxt = ref.gol_rule_ref(centre, neigh, g)
     return unblockize(nxt, M, kind=block_kind)
@@ -93,8 +107,7 @@ def pack_surface(data_path: jnp.ndarray, spec: OrderingSpec, M: int, g: int,
 def unpack_surface(data_path: jnp.ndarray, buf: jnp.ndarray,
                    spec: OrderingSpec, M: int, g: int, face: str) -> jnp.ndarray:
     """Inverse of pack_surface: scatter a buffer back into the cube."""
-    idx = surface_path_indices(spec, M, g, face)
-    return data_path.at[jnp.asarray(idx)].set(buf)
+    return data_path.at[_surface_idx_device(spec, M, g, face)].set(buf)
 
 
 # ----------------------------------------------------------------------

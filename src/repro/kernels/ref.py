@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["stencil_sum_ref", "gol_rule_ref", "gol3d_step_ref",
+           "assemble_halo_ref", "stencil_sum_resident_ref",
            "gather_rows_ref", "attention_ref"]
 
 
@@ -27,6 +28,40 @@ def stencil_sum_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
                 acc = acc + weights[dk, di, dj].astype(jnp.float32) * (
                     blocks[:, dk:dk + T, di:di + T, dj:dj + T].astype(jnp.float32))
     return acc
+
+
+def assemble_halo_ref(store: jnp.ndarray, nbr: jnp.ndarray, g: int) -> jnp.ndarray:
+    """Resident halo assembly: gather each block's (T+2g)³ window from the
+    un-haloed curve-ordered store via the SFC neighbour table.
+
+    store: (nb, T, T, T); nbr: (nb, 27) full table (core.neighbors);
+    returns (nb, T+2g, T+2g, T+2g). With the periodic table of the same
+    ordering this is bit-identical to layout.blockize_with_halo — the
+    jnp oracle of the in-kernel assembly in stencil3d.stencil_sum_resident.
+    """
+    T = store.shape[1]
+    assert g <= T, (g, T)
+    nbr = jnp.asarray(nbr)
+    spans = (slice(T - g, T), slice(None), slice(0, g))  # lo, mid, hi
+    slabs = []
+    for a in range(3):
+        planes = []
+        for b in range(3):
+            parts = []
+            for c in range(3):
+                col = a * 9 + b * 3 + c
+                src = store if col == 13 else store[nbr[:, col]]
+                parts.append(src[:, spans[a], spans[b], spans[c]])
+            planes.append(jnp.concatenate(parts, axis=3))
+        slabs.append(jnp.concatenate(planes, axis=2))
+    return jnp.concatenate(slabs, axis=1)
+
+
+def stencil_sum_resident_ref(store: jnp.ndarray, weights: jnp.ndarray,
+                             nbr: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for stencil3d.stencil_sum_resident (no halo store in HBM)."""
+    g = (weights.shape[0] - 1) // 2
+    return stencil_sum_ref(assemble_halo_ref(store, nbr, g), weights)
 
 
 def gol_rule_ref(state: jnp.ndarray, neigh_sum: jnp.ndarray, g: int) -> jnp.ndarray:

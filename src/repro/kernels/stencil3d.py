@@ -1,22 +1,35 @@
-"""Pallas TPU kernel: SFC-blocked 3D weighted stencil.
+"""Pallas TPU kernels: SFC-blocked 3D weighted stencil (DESIGN.md §2–§3).
 
-The paper's layout insight, TPU-native (DESIGN.md §2): the cube is stored
-as ``(n_blocks, T+2g, T+2g, T+2g)`` halo-extended blocks whose order in
-HBM follows a space-filling curve (core/layout.blockize_with_halo). The
-kernel walks blocks *sequentially in memory* — so curve ordering makes the
-HBM→VMEM stream of neighbouring blocks (which share halo data, already
-duplicated) contiguous, the HBM/VMEM analogue of the paper's cache-line
-argument. One grid step = one block: load ``(T+2g)³`` window into VMEM,
-produce a ``T³`` tile.
+Two forms of the paper's layout insight:
+
+``stencil_sum_blocks`` — the original *repack* form: the cube is stored
+as ``(nb, T+2g, T+2g, T+2g)`` halo-extended blocks whose order in HBM
+follows a space-filling curve (core/layout.blockize_with_halo). One grid
+step = one block: load the ``(T+2g)³`` window into VMEM, produce a ``T³``
+tile. Simple, but the halo store duplicates HBM by ``((T+2g)/T)³`` and
+must be rebuilt from the canonical cube every step — an O(M³) gather
+that swamps the kernel's contiguous-walk advantage (DESIGN.md §3).
+
+``stencil_sum_resident`` — the *resident* form: the store is the
+un-haloed ``(nb, T, T, T)`` block array that persists across timesteps,
+and the halo is assembled **inside the kernel**. A precomputed SFC
+neighbour table (core/neighbors.py) rides the scalar-prefetch channel —
+the same mechanism as kernels/sfc_gather.py — so the index map of grid
+step ``i`` can point each of the 27 window pieces (6 faces, 12 edges,
+8 corners, 1 centre) at the right slice of the right neighbour block.
+The HBM read per step is exactly ``(T+2g)³`` per block with *no* halo
+store in HBM and *no* per-step repack; because blocks are curve-ordered,
+consecutive grid steps ask for overlapping neighbour sets, which Pallas'
+revisiting-block elision turns into VMEM reuse.
 
 VMEM budget: ``4B·((T+2g)³ + T³ + (2g+1)³)`` — e.g. T=32, g=1 → ~290 KiB,
 far under the ~16 MiB/core budget, leaving room for Pallas' double
 buffering of the streamed blocks.  MXU note: a pure stencil is VPU work
-(elementwise FMA); the kernel unrolls the (2g+1)³ taps for g ≤ 2 so the
-adds pipeline, and falls back to a ``fori_loop`` for larger g to bound
+(elementwise FMA); both kernels unroll the (2g+1)³ taps for g ≤ 2 so the
+adds pipeline, and fall back to a ``fori_loop`` for larger g to bound
 code size. Production layouts would pad the minor dim to the 128-lane
 register width; correctness here is validated in interpret mode against
-ref.stencil_sum_ref.
+ref.stencil_sum_ref / ref.stencil_sum_resident_ref.
 """
 
 from __future__ import annotations
@@ -26,25 +39,23 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["stencil_sum_blocks"]
+__all__ = ["stencil_sum_blocks", "stencil_sum_resident"]
 
 _UNROLL_TAP_LIMIT = 125  # unroll (2g+1)^3 taps up to g=2
 
 
-def _kernel_unrolled(w_ref, x_ref, o_ref, *, T: int, s: int):
-    x = x_ref[0].astype(jnp.float32)
-    acc = jnp.zeros((T, T, T), dtype=jnp.float32)
-    for dk in range(s):
-        for di in range(s):
-            for dj in range(s):
-                acc = acc + w_ref[dk, di, dj].astype(jnp.float32) * (
-                    x[dk:dk + T, di:di + T, dj:dj + T])
-    o_ref[0] = acc
-
-
-def _kernel_looped(w_ref, x_ref, o_ref, *, T: int, s: int):
-    x = x_ref[0].astype(jnp.float32)
+def _tap_sum(x: jnp.ndarray, w_ref, T: int, s: int) -> jnp.ndarray:
+    """acc[z] = sum_d w[d] * x[z+d] over the (s,s,s) taps; x: (T+s-1,)³."""
+    if s ** 3 <= _UNROLL_TAP_LIMIT:
+        acc = jnp.zeros((T, T, T), dtype=jnp.float32)
+        for dk in range(s):
+            for di in range(s):
+                for dj in range(s):
+                    acc = acc + w_ref[dk, di, dj].astype(jnp.float32) * (
+                        x[dk:dk + T, di:di + T, dj:dj + T])
+        return acc
 
     def body(t, acc):
         dk = t // (s * s)
@@ -53,9 +64,14 @@ def _kernel_looped(w_ref, x_ref, o_ref, *, T: int, s: int):
         win = jax.lax.dynamic_slice(x, (dk, di, dj), (T, T, T))
         return acc + w_ref[dk, di, dj].astype(jnp.float32) * win
 
-    acc = jax.lax.fori_loop(0, s * s * s, body,
-                            jnp.zeros((T, T, T), dtype=jnp.float32))
-    o_ref[0] = acc
+    return jax.lax.fori_loop(0, s * s * s, body,
+                             jnp.zeros((T, T, T), dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------- repack form
+
+def _halo_kernel(w_ref, x_ref, o_ref, *, T: int, s: int):
+    o_ref[0] = _tap_sum(x_ref[0].astype(jnp.float32), w_ref, T, s)
 
 
 @functools.partial(jax.jit, static_argnames=("g", "interpret"))
@@ -71,8 +87,7 @@ def stencil_sum_blocks(blocks: jnp.ndarray, weights: jnp.ndarray, *,
     s = 2 * g + 1
     T = W - 2 * g
     assert weights.shape == (s, s, s), (weights.shape, s)
-    body = _kernel_unrolled if s ** 3 <= _UNROLL_TAP_LIMIT else _kernel_looped
-    kern = functools.partial(body, T=T, s=s)
+    kern = functools.partial(_halo_kernel, T=T, s=s)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((nb, T, T, T), jnp.float32),
@@ -84,3 +99,82 @@ def stencil_sum_blocks(blocks: jnp.ndarray, weights: jnp.ndarray, *,
         out_specs=pl.BlockSpec((1, T, T, T), lambda i: (i, 0, 0, 0)),
         interpret=interpret,
     )(weights, blocks)
+
+
+# -------------------------------------------------------------- resident form
+
+def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
+    """Assemble the (T+2g)³ window from 27 neighbour slices, then tap-sum.
+
+    refs = 27 piece refs (in OFFSETS_FULL order) + the output ref. Piece
+    (a,b,c) has shape (1, sz[a], sz[b], sz[c]) with sz = (g, T, g): low
+    halo, centre span, high halo along each axis.
+    """
+    o_ref = refs[-1]
+    pieces = [r[0].astype(jnp.float32) for r in refs[:-1]]
+    slabs = []
+    n = 0
+    for _a in range(3):
+        planes = []
+        for _b in range(3):
+            planes.append(jnp.concatenate(pieces[n:n + 3], axis=2))
+            n += 3
+        slabs.append(jnp.concatenate(planes, axis=1))
+    x = jnp.concatenate(slabs, axis=0)  # (T+2g, T+2g, T+2g)
+    o_ref[0] = _tap_sum(x, w_ref, T, s)
+
+
+def _piece_index(i, nbr_ref, *, col: int, bidx: tuple):
+    # nbr_ref[i, col] is the path position of the neighbour block this
+    # piece is sliced from; bidx addresses the slice in block-shape units.
+    return (nbr_ref[i, col],) + bidx
+
+
+@functools.partial(jax.jit, static_argnames=("g", "interpret"))
+def stencil_sum_resident(store: jnp.ndarray, weights: jnp.ndarray,
+                         nbr: jnp.ndarray, *, g: int,
+                         interpret: bool = True) -> jnp.ndarray:
+    """In-kernel halo streaming over the persistent block store.
+
+    store:   (nb, T, T, T)  — SFC-ordered, *no* halo duplication
+    weights: (2g+1, 2g+1, 2g+1)
+    nbr:     (nb, 27) int32 — full periodic neighbour table of the same
+             ordering (core.neighbors.neighbor_table), scalar-prefetched
+    returns: (nb, T, T, T) float32, bit-identical to
+             stencil_sum_blocks(blockize_with_halo(...), ...)
+
+    Halo pieces are addressed in block-shape units, so g must divide T
+    (g ∈ {1, 2, 4, ...} for T = 8; use the repack form otherwise).
+    """
+    nb, T = store.shape[0], store.shape[1]
+    s = 2 * g + 1
+    assert store.shape == (nb, T, T, T), store.shape
+    assert weights.shape == (s, s, s), (weights.shape, s)
+    assert nbr.shape == (nb, 27), nbr.shape
+    if g > T or T % g:
+        raise ValueError(f"resident kernel needs g | T, got T={T}, g={g}")
+
+    sz = (g, T, g)                 # piece extent per axis: lo, mid, hi
+    last = (T // g - 1, 0, 0)      # block index of the slice: lo reads the
+    #                                neighbour's *last* g-slab, mid/hi its first
+    in_specs = [pl.BlockSpec((s, s, s), lambda i, nbr_ref: (0, 0, 0))]
+    for a in range(3):
+        for b in range(3):
+            for c in range(3):
+                col = a * 9 + b * 3 + c
+                in_specs.append(pl.BlockSpec(
+                    (1, sz[a], sz[b], sz[c]),
+                    functools.partial(_piece_index, col=col,
+                                      bidx=(last[a], last[b], last[c]))))
+    kern = functools.partial(_resident_kernel, T=T, s=s)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((nb, T, T, T), jnp.float32),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, T, T, T), lambda i, nbr_ref: (i, 0, 0, 0)),
+        ),
+        interpret=interpret,
+    )(nbr.astype(jnp.int32), weights, *([store] * 27))

@@ -48,6 +48,21 @@ _ELEMWISE = {
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# Operand references in an op's argument list. Newer XLA dumps print the
+# operand *type inline* ("dot(f32[256,512]{1,0} %Arg_0.1, ...)"), so the
+# first whitespace-delimited token is no longer the first operand name —
+# always take %-prefixed symbols.
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(args: str) -> list[str]:
+    return _OPERAND_RE.findall(args)
+
+
+def _first_operand(args: str) -> str | None:
+    names = _OPERAND_RE.findall(args)
+    return names[0] if names else None
+
 
 def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
     elems = 0
@@ -151,13 +166,15 @@ def _dot_flops(op: Op, comp: Computation, global_types: dict) -> float:
     out_elems, _ = _shape_elems_bytes(op.type_str)
     m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.attrs)
     cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
-    lhs_name = None
-    am = re.match(r"\s*%?([\w\.\-]+)", op.args)
-    if am:
-        lhs_name = am.group(1)
     k = 1
-    lhs_type = comp.types.get(lhs_name) or global_types.get(lhs_name, "")
-    sm = _SHAPE_RE.search(lhs_type)
+    # lhs type: prefer the inline operand type (the first shape token in the
+    # argument list, when the dump prints operand shapes), else look the
+    # first operand name up in the symbol tables.
+    sm = _SHAPE_RE.search(op.args)
+    if sm is None:
+        lhs_name = _first_operand(op.args)
+        lhs_type = comp.types.get(lhs_name) or global_types.get(lhs_name, "")
+        sm = _SHAPE_RE.search(lhs_type)
     if sm:
         dims = [int(d) for d in sm.group(2).split(",")] if sm.group(2) else []
         for c in cdims:
@@ -230,7 +247,7 @@ def analyze_hlo(text: str) -> HloCost:
                 m = re.match(r"\s*(\d+)", op.args)
                 if m:
                     pnames[op.name] = int(m.group(1))
-            for a in re.findall(r"%([\w\.\-]+)", op.args):
+            for a in _operand_names(op.args):
                 uses.setdefault(a, []).append(op)
 
         def sliced_bytes(name: str, depth: int = 0) -> int | None:
@@ -239,13 +256,12 @@ def analyze_hlo(text: str) -> HloCost:
                 return None
             total = 0
             for op in uses.get(name, []):
-                first = re.match(r"\s*%?([\w\.\-]+)", op.args)
-                first = first.group(1) if first else ""
+                first = _first_operand(op.args) or ""
                 if op.opcode in _SLICERS and first == name:
                     _, ob = _shape_elems_bytes(op.type_str)
                     total += ob
                 elif op.opcode == "dynamic-update-slice" and first == name:
-                    args = re.findall(r"%([\w\.\-]+)", op.args)
+                    args = _operand_names(op.args)
                     upd = args[1] if len(args) > 1 else None
                     ub = _shape_elems_bytes(comp.types.get(upd, ""))[1] \
                         if upd else 0
@@ -271,15 +287,15 @@ def analyze_hlo(text: str) -> HloCost:
             root = comp.ops[-1]
             seen = 0
             while root.opcode in _PASSTHRU and seen < 4:
-                first = re.match(r"\s*%?([\w\.\-]+)", root.args)
+                first = _first_operand(root.args)
                 nxt = next((o for o in comp.ops
-                            if first and o.name == first.group(1)), None)
+                            if first and o.name == first), None)
                 if nxt is None:
                     break
                 root = nxt
                 seen += 1
             if root.opcode == "dynamic-update-slice":
-                args = re.findall(r"%([\w\.\-]+)", root.args)
+                args = _operand_names(root.args)
                 upd = args[1] if len(args) > 1 else None
                 if upd:
                     dus_root_out_bytes[cname] = _shape_elems_bytes(
@@ -339,7 +355,7 @@ def analyze_hlo(text: str) -> HloCost:
                         _, ob = _shape_elems_bytes(op.type_str)
                     sliced = sliced_param_bytes.get(callee, {})
                     ib = 0
-                    for i, a in enumerate(re.findall(r"%([\w\.\-]+)", op.args)):
+                    for i, a in enumerate(_operand_names(op.args)):
                         if i in sliced:
                             ib += sliced[i]  # slice traffic, not full buffer
                         else:
@@ -367,7 +383,7 @@ def analyze_hlo(text: str) -> HloCost:
                     _, ob = _shape_elems_bytes(op.type_str)
                     ib = sum(_shape_elems_bytes(
                         comp.types.get(a, global_types.get(a, "")))[1]
-                        for a in re.findall(r"%([\w\.\-]+)", op.args))
+                        for a in _operand_names(op.args))
                     out.add_bytes("dot", ib + ob)
             elif oc == "convolution":
                 # out_elems × (2 × kernel spatial × in_features) — generic
@@ -383,10 +399,8 @@ def analyze_hlo(text: str) -> HloCost:
                 if oc in _ELEMWISE or oc.startswith("reduce"):
                     elems, _ = _shape_elems_bytes(
                         op.type_str if not oc.startswith("reduce")
-                        else comp.types.get(
-                            re.findall(r"%([\w\.\-]+)", op.args)[0]
-                            if re.findall(r"%([\w\.\-]+)", op.args) else "",
-                            op.type_str))
+                        else comp.types.get(_first_operand(op.args) or "",
+                                            op.type_str))
                     out.flops += elems
                 if not in_fusion and oc not in (
                         "parameter", "constant", "tuple", "get-tuple-element",
@@ -399,7 +413,7 @@ def analyze_hlo(text: str) -> HloCost:
                     elif oc in ("dynamic-update-slice", "scatter"):
                         # traffic = update operand (read) + written region;
                         # the full buffer is aliased, not rewritten
-                        args = re.findall(r"%([\w\.\-]+)", op.args)
+                        args = _operand_names(op.args)
                         upd = args[1] if len(args) > 1 else None
                         ub = _shape_elems_bytes(
                             comp.types.get(upd, global_types.get(upd, "")))[1] \
@@ -408,7 +422,7 @@ def analyze_hlo(text: str) -> HloCost:
                     else:
                         ib = sum(_shape_elems_bytes(
                             comp.types.get(a, global_types.get(a, "")))[1]
-                            for a in re.findall(r"%([\w\.\-]+)", op.args))
+                            for a in _operand_names(op.args))
                         out.add_bytes(oc, ib + ob)
         return out
 

@@ -1,5 +1,8 @@
 """The paper's stencil application: gol3d + distributed halo exchange."""
 
 from .gol3d import Gol3d, Gol3dConfig  # noqa: F401
+from .pipeline import (  # noqa: F401
+    ResidentPipeline, repack_bytes_per_step, resident_bytes_per_step,
+)
 from .domain import Decomposition3D, make_stencil_mesh, STENCIL_AXES  # noqa: F401
 from .halo import halo_exchange_local, make_distributed_step, surface_slab_scatter  # noqa: F401

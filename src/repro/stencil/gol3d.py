@@ -5,6 +5,15 @@ Extends Game of Life to 3D with a runtime-selectable stencil radius g
 ordering; the update walks the cube along the ordering's path, realised
 on TPU as the SFC-blocked kernel pipeline (kernels/stencil3d.py) whose
 grid order follows the curve because the blocks are laid out along it.
+
+Two execution modes (DESIGN.md §3):
+
+- per-step *repack* (``step_fn``/``run``): each step rebuilds the
+  halo-extended block store from the canonical cube — the seed pipeline,
+  kept as the equivalence baseline;
+- fused *resident* (``run_resident``): blockize once, run K steps on the
+  persistent curve-ordered store with in-kernel halo streaming
+  (stencil/pipeline.py), unblockize once.
 """
 
 from __future__ import annotations
@@ -16,8 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import OrderingSpec, ROW_MAJOR, apply_ordering, undo_ordering
+from repro.core.neighbors import block_kind_of
 from repro.kernels import ops
 from repro.kernels import ref as kref
+
+from .pipeline import ResidentPipeline
 
 __all__ = ["Gol3dConfig", "Gol3d"]
 
@@ -47,11 +59,18 @@ class Gol3d:
     def cube(self) -> jnp.ndarray:
         return undo_ordering(self.state_path, self.cfg.ordering, self.cfg.M)
 
+    @property
+    def block_kind(self) -> str:
+        """Block-grid curve for the kernel pipelines: the ordering's own
+        curve when it has one, else Morton (the pipeline is SFC-blocked
+        even when the logical state ordering is row/column-major)."""
+        kind = block_kind_of(self.cfg.ordering)
+        return kind if kind in ("morton", "hilbert") else "morton"
+
     def step_fn(self):
-        """jit-able (state_path -> state_path) single update."""
+        """jit-able (state_path -> state_path) single update (repack mode)."""
         cfg = self.cfg
-        kind = ("morton" if cfg.ordering.kind not in ("morton", "hilbert")
-                else cfg.ordering.kind)
+        kind = self.block_kind
 
         @jax.jit
         def step(state_path):
@@ -68,6 +87,22 @@ class Gol3d:
         for _ in range(n_steps):
             s = step(s)
         self.state_path = jax.block_until_ready(s)
+        return self.state_path
+
+    def resident_pipeline(self) -> ResidentPipeline:
+        """The fused driver over this app's block layout (DESIGN.md §3)."""
+        cfg = self.cfg
+        return ResidentPipeline(M=cfg.M, T=cfg.block_T, g=cfg.g,
+                                kind=self.block_kind,
+                                use_kernel=cfg.use_kernel)
+
+    def run_resident(self, n_steps: int) -> jnp.ndarray:
+        """Fused multi-step run: the curve-ordered block store is the
+        resident state for all n_steps; layout conversions happen once at
+        each end. Bit-identical to ``run`` (same block kind, same rule)."""
+        pipe = self.resident_pipeline()
+        cube = pipe.run(self.cube, n_steps)
+        self.state_path = jax.block_until_ready(apply_ordering(cube, self.cfg.ordering))
         return self.state_path
 
     def reference_run(self, n_steps: int) -> jnp.ndarray:

@@ -24,6 +24,7 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import OrderingSpec, apply_ordering, undo_ordering
 from repro.core.cache_model import face_mask
+from repro.core.neighbors import ring_perms
 from repro.core.surfaces import surface_path_indices
 from repro.kernels import ops
 from repro.kernels import ref as kref
@@ -60,15 +61,13 @@ def surface_slab_scatter(spec: OrderingSpec, M: int, g: int, face: str) -> np.nd
     else:
         jj = j if side == "0" else j - (M - g)
         pos = (k * M + i) * g + jj
-    pos = pos.astype(np.int64)
+    pos = pos.astype(np.int32)  # int32: M³ < 2³¹ (core.orderings._check_int32)
     pos.setflags(write=False)
     return pos
 
 
-def _ring_perms(n: int):
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-    bwd = [(i, (i - 1) % n) for i in range(n)]
-    return fwd, bwd
+# neighbour conventions (ring partners) are shared with the block tables
+_ring_perms = ring_perms
 
 
 def _exchange_axis_slices(x: jnp.ndarray, axis_name: str, axis: int, g: int):

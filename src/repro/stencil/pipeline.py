@@ -1,0 +1,146 @@
+"""Fused resident-block-store stencil driver (DESIGN.md §3).
+
+The paper's central claim is that SFC orderings pay off only when the
+curve order *is* the storage order — reorder once, iterate many times
+(§2, §4). This driver enforces that discipline for the gol3d workload:
+
+    blockize once  →  K timesteps entirely in curve-ordered block form
+                      (halo assembled in-kernel from the neighbour
+                      tables, never materialised in HBM)
+                   →  unblockize once.
+
+The per-step state is exactly one ``(nb, T, T, T)`` block store — M³
+elements, no ``((T+2g)/T)³`` halo duplication — and consecutive steps
+ping-pong between two such stores: the K-step runner is jit'd with the
+input store donated, so XLA aliases the output of step k as the input
+of step k+1 (classic double buffering) instead of allocating per step.
+
+``bytes_per_step`` quantifies the win over the repack pipeline
+(kernels/ops.gol3d_step) for the benchmark trajectory.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.layout import blockize, unblockize
+from repro.core.neighbors import neighbor_table_device
+from repro.kernels import ref as kref
+from repro.kernels.ops import uniform_weights
+from repro.kernels.stencil3d import stencil_sum_resident
+
+__all__ = ["ResidentPipeline", "repack_bytes_per_step", "resident_bytes_per_step"]
+
+
+@dataclass(frozen=True)
+class ResidentPipeline:
+    """gol3d over a persistent curve-ordered block store.
+
+    M:          cube edge (power of 2)
+    T:          block edge (T | M; g | T for the kernel path)
+    g:          stencil radius (periodic boundaries)
+    kind:       block-grid curve — "morton" | "hilbert" | "row_major" |
+                "column_major" (core.neighbors.block_kind_of maps an
+                OrderingSpec here)
+    use_kernel: Pallas resident kernel (interpret on CPU) vs jnp oracle
+    """
+    M: int
+    T: int = 8
+    g: int = 1
+    kind: str = "morton"
+    use_kernel: bool = False
+    interpret: bool = True
+
+    def __post_init__(self):
+        assert self.M % self.T == 0, (self.M, self.T)
+
+    @property
+    def nt(self) -> int:
+        return self.M // self.T
+
+    @property
+    def nb(self) -> int:
+        return self.nt ** 3
+
+    # -- layout boundary (paid once per K-step run, not per step) ---------
+    def to_blocks(self, cube: jnp.ndarray) -> jnp.ndarray:
+        return blockize(cube, self.T, kind=self.kind)
+
+    def to_cube(self, store: jnp.ndarray) -> jnp.ndarray:
+        return unblockize(store, self.M, kind=self.kind)
+
+    # -- the resident step -------------------------------------------------
+    def step_fn(self):
+        """(store -> store) single gol3d update, all in block order."""
+        g, w = self.g, uniform_weights(self.g)
+        nbr = neighbor_table_device(self.kind, self.nt)
+        use_kernel, interpret = self.use_kernel, self.interpret
+
+        def step(store):
+            if use_kernel:
+                neigh = stencil_sum_resident(store, w, nbr, g=g,
+                                             interpret=interpret)
+            else:
+                neigh = kref.stencil_sum_resident_ref(store, w, nbr)
+            return kref.gol_rule_ref(store, neigh, g).astype(store.dtype)
+
+        return step
+
+    def run_fn(self, n_steps: int):
+        """jit'd fused K-step runner over the donated (double-buffered) store."""
+        step = self.step_fn()
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+
+        @functools.partial(jax.jit, donate_argnums=donate)
+        def run(store):
+            return jax.lax.fori_loop(0, n_steps, lambda _, s: step(s), store)
+
+        return run
+
+    def run(self, cube: jnp.ndarray, n_steps: int) -> jnp.ndarray:
+        """blockize once → n_steps fused curve-ordered updates → unblockize."""
+        store = self.to_blocks(cube)
+        store = self.run_fn(n_steps)(store)
+        return self.to_cube(store)
+
+    # -- modelled HBM traffic (benchmarks/stencil_update.py) ---------------
+    def bytes_per_step(self, n_steps: int, itemsize: int = 4) -> float:
+        return resident_bytes_per_step(self.M, self.T, self.g, n_steps,
+                                       itemsize)
+
+
+def repack_bytes_per_step(M: int, T: int, g: int, itemsize: int = 4) -> float:
+    """Modelled HBM bytes per step of the repack pipeline (ops.gol3d_step).
+
+    Every step: read the M³ cube, write the halo-duplicated (nb·(T+2g)³)
+    store, stream it back through the kernel, write nb·T³ partial sums,
+    then read them again to rebuild the canonical cube. The
+    ((T+2g)/T)³ inflation and the O(M³) repack recur each step.
+    """
+    nb = (M // T) ** 3
+    W3 = (T + 2 * g) ** 3
+    cube, halo, out = M ** 3, nb * W3, nb * T ** 3
+    #      repack read + halo write + kernel read + kernel write
+    #      + rule read/write + unblockize read + cube write
+    return itemsize * float(cube + halo + halo + out + 2 * out + out + cube)
+
+
+def resident_bytes_per_step(M: int, T: int, g: int, n_steps: int,
+                            itemsize: int = 4) -> float:
+    """Modelled HBM bytes per step of the resident pipeline, amortised.
+
+    Per step the kernel reads exactly (T+2g)³ per block (centre + halo
+    slices gathered from neighbour blocks — no duplicated halo store)
+    and writes T³; the rule pass reads/writes the T³ store. The one-off
+    blockize/unblockize (read M³ + write M³ each) amortises over K.
+    """
+    nb = (M // T) ** 3
+    W3 = (T + 2 * g) ** 3
+    cube, out = M ** 3, nb * T ** 3
+    per_step = nb * W3 + out + 2 * out
+    boundary = 2 * (2 * cube)  # blockize + unblockize, once per run
+    return itemsize * float(per_step + boundary / max(n_steps, 1))

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis; deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     HILBERT, MORTON, ROW_MAJOR, cache_misses, offset_histogram,

@@ -1,0 +1,190 @@
+"""Resident-block layer: neighbour tables, block round-trips, fused pipeline."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HILBERT, MORTON, ROW_MAJOR, OrderingSpec,
+                        blockize, blockize_with_halo, unblockize)
+from repro.core.neighbors import (FACE_COLS, OFFSETS_FACE, OFFSETS_FULL,
+                                  SELF_COL, block_kind_of, neighbor_table,
+                                  neighbor_table_device, ring_perms)
+from repro.core.layout import block_order
+from repro.core.orderings import path_to_rmo, rmo_to_path
+from repro.kernels import ref
+from repro.kernels.ops import uniform_weights
+from repro.kernels.stencil3d import stencil_sum_blocks, stencil_sum_resident
+from repro.stencil import Gol3d, Gol3dConfig, ResidentPipeline
+from repro.stencil.pipeline import repack_bytes_per_step, resident_bytes_per_step
+
+rng = np.random.default_rng(7)
+
+KINDS = ("row_major", "column_major", "morton", "hilbert")
+HYBRID = OrderingSpec("hybrid", tile=4, outer="hilbert", inner="row_major")
+
+
+# ------------------------------------------------------------ block round-trip
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("M,T", [(16, 8), (16, 4), (32, 8), (8, 8)])
+def test_blockize_roundtrip(kind, M, T):
+    cube = jnp.asarray(rng.normal(size=(M, M, M)).astype(np.float32))
+    blocks = blockize(cube, T, kind=kind)
+    assert blocks.shape == ((M // T) ** 3, T, T, T)
+    back = unblockize(blocks, M, kind=kind)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(cube))
+
+
+def test_permutations_are_int32():
+    """DESIGN.md §2: permutation tables ride int32 (gather/prefetch width)."""
+    for spec in (ROW_MAJOR, MORTON, HILBERT, HYBRID):
+        assert rmo_to_path(spec, 16).dtype == np.int32
+        assert path_to_rmo(spec, 16).dtype == np.int32
+
+
+# ------------------------------------------------------------ neighbour tables
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("nt", [2, 4, 8])
+@pytest.mark.parametrize("periodic", [True, False])
+def test_neighbor_table_brute_force(kind, nt, periodic):
+    """Every table entry matches direct coordinate arithmetic."""
+    tab = neighbor_table(kind, nt, periodic=periodic)
+    assert tab.shape == (nt ** 3, 27)
+    assert tab.dtype == np.int32
+    bo = block_order(kind, nt)  # path pos -> (k,i,j)
+    lin_to_path = {(int(k), int(i), int(j)): t
+                   for t, (k, i, j) in enumerate(bo)}
+    for t in range(nt ** 3):
+        k, i, j = (int(c) for c in bo[t])
+        for o, (dk, di, dj) in enumerate(OFFSETS_FULL):
+            if periodic:
+                key = ((k + dk) % nt, (i + di) % nt, (j + dj) % nt)
+            else:
+                key = (min(max(k + dk, 0), nt - 1),
+                       min(max(i + di, 0), nt - 1),
+                       min(max(j + dj, 0), nt - 1))
+            assert tab[t, o] == lin_to_path[key], (t, o, key)
+
+
+def test_neighbor_table_face_variant():
+    tab6 = neighbor_table("hilbert", 4, connectivity="face")
+    tab27 = neighbor_table("hilbert", 4)
+    assert tab6.shape == (64, 6)
+    np.testing.assert_array_equal(tab6, tab27[:, list(FACE_COLS)])
+    # column order is [k-, k+, i-, i+, j-, j+]
+    assert tuple(OFFSETS_FULL[c] for c in FACE_COLS) == OFFSETS_FACE
+    # self column is the identity
+    np.testing.assert_array_equal(tab27[:, SELF_COL], np.arange(64))
+
+
+def test_neighbor_table_spec_generic():
+    """OrderingSpec and its block-kind string resolve to the same table."""
+    assert block_kind_of(HILBERT) == "hilbert"
+    assert block_kind_of(HYBRID) == "hilbert"
+    assert block_kind_of("morton") == "morton"
+    np.testing.assert_array_equal(neighbor_table(HILBERT, 4),
+                                  neighbor_table("hilbert", 4))
+    np.testing.assert_array_equal(neighbor_table(HYBRID, 4),
+                                  neighbor_table("hilbert", 4))
+
+
+def test_neighbor_table_cached_and_readonly():
+    a = neighbor_table("morton", 4)
+    assert neighbor_table("morton", 4) is a
+    assert not a.flags.writeable
+    d = neighbor_table_device("morton", 4)
+    assert neighbor_table_device("morton", 4) is d
+
+
+def test_ring_perms():
+    fwd, bwd = ring_perms(4)
+    assert fwd == [(0, 1), (1, 2), (2, 3), (3, 0)]
+    assert bwd == [(0, 3), (1, 0), (2, 1), (3, 2)]
+
+
+# ------------------------------------------------- in-kernel halo vs repacked
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("g", [1, 2])
+def test_assemble_halo_bit_identical(kind, g):
+    M, T = 16, 8
+    cube = jnp.asarray(rng.normal(size=(M, M, M)).astype(np.float32))
+    halo = blockize_with_halo(cube, T, g, kind=kind, periodic=True)
+    store = blockize(cube, T, kind=kind)
+    nbr = neighbor_table_device(kind, M // T)
+    asm = ref.assemble_halo_ref(store, nbr, g)
+    np.testing.assert_array_equal(np.asarray(asm), np.asarray(halo))
+
+
+@pytest.mark.parametrize("kind", ("morton", "hilbert"))
+@pytest.mark.parametrize("g,T", [(1, 8), (2, 8), (1, 4), (4, 4)])
+def test_resident_kernel_bit_identical(kind, g, T):
+    """Pallas resident kernel == Pallas repack kernel, bit for bit."""
+    M = 16
+    cube = jnp.asarray(rng.normal(size=(M, M, M)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(2 * g + 1,) * 3).astype(np.float32))
+    old = stencil_sum_blocks(
+        blockize_with_halo(cube, T, g, kind=kind, periodic=True), w, g=g)
+    new = stencil_sum_resident(blockize(cube, T, kind=kind), w,
+                               neighbor_table_device(kind, M // T), g=g)
+    np.testing.assert_array_equal(np.asarray(new), np.asarray(old))
+
+
+def test_resident_kernel_rejects_non_dividing_g():
+    store = jnp.zeros((8, 8, 8, 8), jnp.float32)
+    nbr = neighbor_table_device("morton", 2)
+    with pytest.raises(ValueError):
+        stencil_sum_resident(store, jnp.zeros((7, 7, 7)), nbr, g=3)
+
+
+# -------------------------------------------------------------- fused pipeline
+@pytest.mark.parametrize("ordering", [ROW_MAJOR, MORTON, HILBERT, HYBRID],
+                         ids=lambda s: s.name)
+@pytest.mark.parametrize("M", [16, 32])
+@pytest.mark.parametrize("g", [1, 2])
+def test_resident_pipeline_matches_repack(ordering, M, g):
+    """Acceptance: resident run bit-identical to the per-step repack run."""
+    steps = 3
+    a = Gol3d(Gol3dConfig(M=M, g=g, ordering=ordering, block_T=8))
+    b = Gol3d(Gol3dConfig(M=M, g=g, ordering=ordering, block_T=8))
+    sa = a.run(steps)
+    sb = b.run_resident(steps)
+    np.testing.assert_array_equal(np.asarray(sa), np.asarray(sb))
+
+
+@pytest.mark.parametrize("g", [1, 2])
+def test_resident_pipeline_matches_oracle(g):
+    """K=4 fused steps == the ordering-independent canonical oracle."""
+    app = Gol3d(Gol3dConfig(M=16, g=g, ordering=HILBERT, block_T=8))
+    want = app.reference_run(4)
+    app.run_resident(4)
+    np.testing.assert_array_equal(np.asarray(app.cube), np.asarray(want))
+
+
+def test_resident_pipeline_kernel_mode():
+    app = Gol3d(Gol3dConfig(M=16, g=1, ordering=MORTON, block_T=8,
+                            use_kernel=True))
+    want = app.reference_run(2)
+    app.run_resident(2)
+    np.testing.assert_array_equal(np.asarray(app.cube), np.asarray(want))
+
+
+def test_resident_step_preserves_weights_semantics():
+    """One resident step == one repack gol3d step at the op level."""
+    M, T, g = 16, 8, 1
+    pipe = ResidentPipeline(M=M, T=T, g=g, kind="morton")
+    cube = jnp.asarray((rng.random((M, M, M)) < 0.3).astype(np.float32))
+    got = pipe.run(cube, 1)
+    want = ref.gol3d_step_ref(cube, g)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bytes_model_resident_wins():
+    """The point of the refactor: strictly fewer bytes/step for K >= 2,
+    with no ((T+2g)/T)³ duplication and no per-step O(M³) repack."""
+    for M, T, g in [(32, 8, 1), (32, 8, 2), (64, 8, 1), (64, 16, 2)]:
+        rep = repack_bytes_per_step(M, T, g)
+        for K in (2, 10, 100):
+            res = resident_bytes_per_step(M, T, g, K)
+            assert res < rep, (M, T, g, K)
+        # resident store itself is exactly M³ items — no halo duplication
+        pipe = ResidentPipeline(M=M, T=T, g=g)
+        assert pipe.nb * T ** 3 == M ** 3
