@@ -23,7 +23,12 @@ from repro.core.cache_model import simulate_lru
 from repro.core.layout import blockize, blockize_with_halo
 from repro.core.neighbors import FACE_COLS, SELF_COL, neighbor_table, neighbor_table_device
 from repro.kernels.flash_attn import build_schedule, flash_attention_fwd
-from repro.kernels.stencil3d import stencil_sum_blocks, stencil_sum_resident
+from repro.kernels.ops import uniform_weights
+from repro.kernels.stencil3d import (stencil_step_fused, stencil_sum_blocks,
+                                     stencil_sum_resident)
+from repro.stencil.pipeline import (fused_items_per_launch,
+                                    repack_items_per_step,
+                                    resident_unfused_items_per_step)
 
 
 def _attention_block_stream(nq, nk, kind, causal=True):
@@ -101,15 +106,16 @@ def interpret_timing_rows():
 
 
 def resident_kernel_rows(M: int = 16, T: int = 8, g: int = 1,
-                         kind: str = "hilbert"):
-    """Repack vs resident kernel on the same cube (interpret mode, CPU):
-    times both forms and reports the modelled per-step HBM stream — the
-    resident form reads (T+2g)³/block with no halo store and no repack."""
+                         kind: str = "hilbert", S: int = 4):
+    """Repack vs resident vs fused-temporal kernel on the same cube
+    (interpret mode, CPU): times all three forms. The modelled per-
+    substep HBM stream comes from stencil/pipeline.py's shared
+    accounting helpers — the same numbers benchmarks/stencil_update.py
+    reports, asserted consistent in tests/test_fused_stencil.py."""
     rng = np.random.default_rng(0)
     cube = jnp.asarray(rng.normal(size=(M, M, M)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(2 * g + 1,) * 3).astype(np.float32))
     nb = (M // T) ** 3
-    W3 = (T + 2 * g) ** 3
     out = []
 
     halo = blockize_with_halo(cube, T, g, kind=kind)
@@ -121,7 +127,8 @@ def resident_kernel_rows(M: int = 16, T: int = 8, g: int = 1,
     jax.block_until_ready(r)
     out.append((f"kernel/stencil_repack_interpret_{kind}",
                 (time.perf_counter() - t0) / 3 * 1e6,
-                f"T={T};g={g};nb={nb};hbm_items_per_step={M**3 + 2 * nb * W3 + nb * T**3}"))
+                f"T={T};g={g};nb={nb}"
+                f";hbm_items_per_substep={repack_items_per_step(M, T, g)}"))
 
     store = blockize(cube, T, kind=kind)
     nbr = neighbor_table_device(kind, M // T)
@@ -132,7 +139,21 @@ def resident_kernel_rows(M: int = 16, T: int = 8, g: int = 1,
     jax.block_until_ready(r)
     out.append((f"kernel/stencil_resident_interpret_{kind}",
                 (time.perf_counter() - t0) / 3 * 1e6,
-                f"T={T};g={g};nb={nb};hbm_items_per_step={nb * W3 + nb * T**3}"))
+                f"T={T};g={g};nb={nb}"
+                f";hbm_items_per_substep={resident_unfused_items_per_step(M, T, g)}"))
+
+    # fused temporal blocking: S whole gol substeps per launch
+    gw = uniform_weights(g)
+    stencil_step_fused(store, gw, nbr, g=g, S=S, rule="gol")  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        r = stencil_step_fused(store, gw, nbr, g=g, S=S, rule="gol")
+    jax.block_until_ready(r)
+    per_sub = fused_items_per_launch(M, T, g, S) / S
+    out.append((f"kernel/stencil_fused_S{S}_interpret_{kind}",
+                (time.perf_counter() - t0) / 3 / S * 1e6,
+                f"T={T};g={g};nb={nb};S={S}"
+                f";hbm_items_per_substep={per_sub:.0f}"))
     return out
 
 

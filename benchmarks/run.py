@@ -10,16 +10,19 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
 
 Flags:
   --fast          smaller sizes (CI-friendly)
-  --json PATH     additionally write the rows as a JSON list of
-                  {"name", "us_per_call", "derived": {k: v}} objects —
-                  the machine-readable form the perf trajectory tracking
-                  consumes (derived "k=v;k=v" strings are split; numeric
-                  values are parsed).
+  --json PATH     additionally write {"git_rev": ..., "rows": [...]} where
+                  rows is a list of {"name", "us_per_call", "derived":
+                  {k: v}} objects — the machine-readable form the perf
+                  trajectory tracking consumes (derived "k=v;k=v" strings
+                  are split; numeric values are parsed; git_rev stamps
+                  which revision produced the numbers).
 """
 
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
 
 
@@ -39,6 +42,19 @@ def _parse_derived(derived: str) -> dict:
             except ValueError:
                 out[k] = v
     return out
+
+
+def git_rev() -> str:
+    """Short rev of the benchmarked tree (``unknown`` outside a checkout)."""
+    try:
+        r = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        rev = r.stdout.strip()
+        return rev if r.returncode == 0 and rev else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
 
 
 def collect(fast: bool = False) -> list[tuple[str, float, str]]:
@@ -73,12 +89,16 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
 
     if json_path:
-        payload = [{"name": name, "us_per_call": round(us, 1),
-                    "derived": _parse_derived(derived)}
-                   for name, us, derived in rows]
+        payload = {
+            "git_rev": git_rev(),
+            "rows": [{"name": name, "us_per_call": round(us, 1),
+                      "derived": _parse_derived(derived)}
+                     for name, us, derived in rows],
+        }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=1)
-        print(f"# wrote {len(payload)} rows to {json_path}", file=sys.stderr)
+        print(f"# wrote {len(payload['rows'])} rows "
+              f"(rev {payload['git_rev']}) to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

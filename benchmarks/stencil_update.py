@@ -5,12 +5,15 @@ M ∈ {32, 64} (the paper's 64–256 scaled to this container's single CPU
 core; the ordering *comparison* is the object, not absolute time).
 Times the jit'd SFC-blocked update pipeline end-to-end.
 
-The ``resident/`` rows compare the two pipeline forms (DESIGN.md §3) on
-the same workload: per-step *repack* (blockize_with_halo every step)
-vs the fused *resident* block store (stencil/pipeline.py). ``derived``
-carries the modelled per-step HBM bytes of each form — the resident
-path must move strictly fewer bytes for K ≥ 2 since it has no
-((T+2g)/T)³ halo duplication and no per-step O(M³) repack.
+The ``resident/`` rows compare the pipeline forms (DESIGN.md §3–§4) on
+the same workload: per-step *repack* (blockize_with_halo every step) vs
+the fused *resident* block store at temporal-blocking depths S ∈ {1, 4}
+(stencil/pipeline.py). ``derived`` carries the modelled per-substep HBM
+bytes of every form — all computed by the pipeline's shared accounting
+helpers (one source of truth, asserted consistent in
+tests/test_fused_stencil.py): the fused path at S=4 must model ≥ 2×
+fewer bytes/substep than the PR-1 unfused resident path, which itself
+beats repack for K ≥ 2.
 """
 
 from __future__ import annotations
@@ -21,7 +24,8 @@ import jax
 
 from repro.core import HILBERT, MORTON, ROW_MAJOR
 from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
-                           repack_bytes_per_step, resident_bytes_per_step)
+                           repack_bytes_per_step, resident_bytes_per_step,
+                           resident_unfused_bytes_per_step)
 
 N_ITERS = 10
 
@@ -48,29 +52,45 @@ def rows(sizes=(32, 64), stencils=(1, 2)):
     return out
 
 
+def resident_derived(M: int, T: int, g: int, S: int, n_steps: int) -> str:
+    """Shared-accounting derived string for one resident row.
+
+    Reports the fused model alongside the PR-1 unfused and repack
+    models so the perf trajectory shows all three on every row.
+    """
+    fus_b = resident_bytes_per_step(M, T, g, n_steps, S=S)
+    unf_b = resident_unfused_bytes_per_step(M, T, g, n_steps)
+    rep_b = repack_bytes_per_step(M, T, g)
+    return (f"S={S}"
+            f";fused_bytes_per_substep={fus_b:.0f}"
+            f";unfused_bytes_per_step={unf_b:.0f}"
+            f";repack_bytes_per_step={rep_b:.0f}"
+            f";fused_vs_unfused={unf_b / fus_b:.3f}"
+            f";fused_vs_repack={rep_b / fus_b:.3f}")
+
+
 def resident_rows(sizes=(32, 64), stencils=(1, 2), T=8, n_steps=N_ITERS):
-    """Repack vs resident: steps/sec (jnp path, end-to-end) + modelled bytes."""
+    """Fused resident pipeline at S ∈ {1, 4}: steps/sec (jnp path,
+    end-to-end) + the modelled bytes of fused/unfused/repack forms."""
     out = []
     for M in sizes:
         for g in stencils:
-            rep_b = repack_bytes_per_step(M, T, g)
-            res_b = resident_bytes_per_step(M, T, g, n_steps)
-            for kind in ("morton", "hilbert"):
-                pipe = ResidentPipeline(M=M, T=T, g=g, kind=kind)
-                app = Gol3d(Gol3dConfig(M=M, g=g, block_T=T))
-                cube = app.cube
-                run = pipe.run_fn(n_steps)
-                store = jax.block_until_ready(run(pipe.to_blocks(cube)))  # warm
-                store = pipe.to_blocks(cube)
-                t0 = time.perf_counter()
-                store = jax.block_until_ready(run(store))
-                dt = time.perf_counter() - t0
-                out.append((
-                    f"resident/update_M{M}_g{g}_T{T}_{kind}",
-                    dt * 1e6 / n_steps,
-                    f"steps_per_s={n_steps / dt:.1f}"
-                    f";resident_bytes_per_step={res_b:.0f}"
-                    f";repack_bytes_per_step={rep_b:.0f}"
-                    f";bytes_ratio={res_b / rep_b:.3f}",
-                ))
+            cube = Gol3d(Gol3dConfig(M=M, g=g, block_T=T)).cube
+            for S in (1, 4):
+                if S * g > T or T % (S * g):
+                    continue
+                for kind in ("morton", "hilbert"):
+                    pipe = ResidentPipeline(M=M, T=T, g=g, kind=kind, S=S)
+                    run = pipe.run_fn(n_steps)
+                    jax.block_until_ready(run(pipe.to_blocks(cube)))  # warm
+                    store = pipe.to_blocks(cube)
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run(store))
+                    dt = time.perf_counter() - t0
+                    out.append((
+                        f"resident/update_M{M}_g{g}_T{T}_S{S}_{kind}",
+                        dt * 1e6 / n_steps,
+                        f"steps_per_s={n_steps / dt:.1f};"
+                        + resident_derived(M, T, g, S, n_steps),
+                    ))
     return out

@@ -1,9 +1,11 @@
 """Distributed gol3d: 2×2×2 device mesh, SFC halo packing, ppermute rings.
 
 Part 1 (parent process): the resident-block pipeline — blockize once,
-run K steps entirely in curve order with in-kernel halo streaming
-(stencil/pipeline.py), verify bit-identity against the per-step repack
-pipeline, and print the modelled per-step HBM bytes of both forms.
+run K steps entirely in curve order with in-kernel halo streaming and
+S-deep temporal blocking (stencil/pipeline.py; S substeps per HBM
+round-trip), verify bit-identity against the per-step repack pipeline,
+and print the modelled per-substep HBM bytes of repack / unfused /
+fused forms plus the (T, S) the plan() autotuner picks.
 
 Part 2: spawns itself with 8 host devices (the dry-run rule: never force
 device count in the parent process), decomposes a 32³ cube onto the
@@ -19,24 +21,33 @@ import subprocess
 import sys
 
 
-def resident_demo(M=32, g=1, T=8, steps=10):
+def resident_demo(M=32, g=1, T=8, steps=10, S=4):
     import time
 
     import numpy as np
     import jax
 
     from repro.core import HILBERT, MORTON
-    from repro.stencil import (Gol3d, Gol3dConfig, repack_bytes_per_step,
-                               resident_bytes_per_step)
+    from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
+                               repack_bytes_per_step, resident_bytes_per_step,
+                               resident_unfused_bytes_per_step)
 
     print(f"[stencil_halo_demo] resident pipeline, M={M} g={g} T={T} "
-          f"K={steps} steps")
+          f"K={steps} steps, temporal blocking S={S}")
     rep_b = repack_bytes_per_step(M, T, g)
-    res_b = resident_bytes_per_step(M, T, g, steps)
-    print(f"  modelled HBM bytes/step: repack={rep_b / 1e6:.2f} MB  "
-          f"resident={res_b / 1e6:.2f} MB  (x{rep_b / res_b:.2f} less traffic)")
+    unf_b = resident_unfused_bytes_per_step(M, T, g, steps)
+    fus_b = resident_bytes_per_step(M, T, g, steps, S=S)
+    print(f"  modelled HBM bytes/substep: repack={rep_b / 1e6:.2f} MB  "
+          f"resident(unfused)={unf_b / 1e6:.2f} MB  "
+          f"fused S={S}={fus_b / 1e6:.2f} MB  "
+          f"(x{rep_b / fus_b:.2f} vs repack, x{unf_b / fus_b:.2f} vs unfused)")
+    auto = ResidentPipeline.plan(M, g=g)
+    print(f"  plan(M={M}, g={g}) -> T={auto.T} S={auto.S} "
+          f"(vmem {auto.vmem_bytes() / 1024:.0f} KiB, "
+          f"{auto.bytes_per_step(steps) / 1e6:.2f} MB/substep)")
     for spec in (MORTON, HILBERT):
-        app = Gol3d(Gol3dConfig(M=M, g=g, ordering=spec, block_T=T))
+        app = Gol3d(Gol3dConfig(M=M, g=g, ordering=spec, block_T=T,
+                                substeps=S))
         # repack: warm the per-step jit, then time K steps
         step = app.step_fn()
         jax.block_until_ready(step(app.state_path))
@@ -46,7 +57,7 @@ def resident_demo(M=32, g=1, T=8, steps=10):
             s = step(s)
         sa = jax.block_until_ready(s)
         t_rep = time.perf_counter() - t0
-        # resident: warm the fused K-step jit, then time one fused run
+        # fused resident: ceil(K/S) launches over the persistent store
         pipe = app.resident_pipeline()
         run = pipe.run_fn(steps)
         jax.block_until_ready(run(pipe.to_blocks(app.cube)))
@@ -57,7 +68,7 @@ def resident_demo(M=32, g=1, T=8, steps=10):
         sb = apply_ordering(pipe.to_cube(out), spec)
         ok = np.array_equal(np.asarray(sa), np.asarray(sb))
         print(f"  {spec.name:10s} repack {t_rep * 1e3 / steps:6.1f} ms/step  "
-              f"resident {t_res * 1e3 / steps:6.1f} ms/step  "
+              f"fused S={pipe.S} {t_res * 1e3 / steps:6.1f} ms/step  "
               f"bit-identical: {ok}")
         assert ok
     print("resident pipeline OK")

@@ -6,7 +6,7 @@ MoE: 64 routed + 2 shared, top-6, first layer dense.
 
 Note: the assignment line lists both "MoE 64e top-6" and "160 routed";
 160 routed is DeepSeek-V2 (236B), not Lite — we follow the authoritative
-"64e top-6" bracket (see DESIGN.md §4).
+"64e top-6" bracket (see DESIGN.md §5).
 """
 
 from repro.models.config import MLAConfig, ModelConfig, MoEConfig

@@ -4,7 +4,7 @@
 12L(dec)+12L(enc) d_model=768 12H d_ff=3072 vocab=51865; encoder sees
 1500 precomputed frame embeddings (``input_specs`` provides them).
 Decoder uses RoPE instead of whisper's learned 448-position table so the
-assigned 32k stress shapes are well-defined (DESIGN.md §4).
+assigned 32k stress shapes are well-defined (DESIGN.md §5).
 """
 
 from repro.models.config import EncDecConfig, ModelConfig

@@ -45,15 +45,20 @@ def device_constant(key, build):
     key:   hashable identity of the table
     build: zero-arg callable producing the numpy array (cheap: the
            numpy side is lru_cached upstream)
+
+    Eviction is LRU: a hit moves the entry to the back of the (insertion
+    -ordered) dict, so hot permutation/neighbour tables survive a full
+    sweep of one-off keys; eviction pops the front. Device buffers are
+    large (an M=256 permutation is 64 MiB), hence the cap.
     """
     hit = _DEVICE_CONSTANTS.get(key)
     if hit is not None:
+        _DEVICE_CONSTANTS[key] = _DEVICE_CONSTANTS.pop(key)  # move-to-end
         return hit
     arr = build()
     if jax.core.trace_state_clean():
         arr = jnp.asarray(arr)
-        while len(_DEVICE_CONSTANTS) >= _DEVICE_CONSTANTS_CAP:  # FIFO cap:
-            # device buffers are large (a M=256 permutation is 64 MiB)
+        while len(_DEVICE_CONSTANTS) >= _DEVICE_CONSTANTS_CAP:
             _DEVICE_CONSTANTS.pop(next(iter(_DEVICE_CONSTANTS)))
         _DEVICE_CONSTANTS[key] = arr
     return arr

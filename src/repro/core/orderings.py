@@ -166,7 +166,7 @@ def path_index_2d(kind: str, n: int) -> np.ndarray:
     """2D path index grid (n×n, n=2^b) for morton/hilbert/row_major.
 
     Used by the flash-attention kernel to traverse the (q-block, kv-block)
-    grid along a space-filling curve (DESIGN.md §4, applicability level 2).
+    grid along a space-filling curve (DESIGN.md §5, applicability level 2).
     Returns an int32 (n*n,) array: sequence of row-major block ids in path
     order.
     """

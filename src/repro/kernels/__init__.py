@@ -1,6 +1,8 @@
 """Pallas TPU kernels (interpret-validated) + jnp oracles.
 
-- stencil3d.py  — SFC-blocked 3D weighted stencil (paper's compute loop)
+- stencil3d.py  — SFC-blocked 3D weighted stencil (paper's compute loop),
+                  incl. the fused temporal-blocked resident form
+- rules.py      — update-rule registry shared by kernels and oracles
 - sfc_gather.py — scalar-prefetched row gather (paper's pack primitive)
 - flash_attn.py — flash attention with Morton/Hilbert block schedule
 - ops.py        — public jit'd wrappers (kernel or jnp-ref selectable)
@@ -11,6 +13,9 @@ from .ops import (  # noqa: F401
     gol3d_step, pack_surface, unpack_surface, flash_attention, sfc_gather_take,
     uniform_weights,
 )
-from .stencil3d import stencil_sum_blocks, stencil_sum_resident  # noqa: F401
+from .rules import RULES, UpdateRule, get_rule  # noqa: F401
+from .stencil3d import (  # noqa: F401
+    stencil_step_fused, stencil_sum_blocks, stencil_sum_resident,
+)
 from .sfc_gather import gather_rows  # noqa: F401
 from .flash_attn import flash_attention_fwd, build_schedule  # noqa: F401

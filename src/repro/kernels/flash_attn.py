@@ -1,6 +1,6 @@
 """Pallas TPU kernel: flash attention with space-filling-curve block schedule.
 
-Beyond-paper application of the paper's idea (DESIGN.md §4, level 2): the
+Beyond-paper application of the paper's idea (DESIGN.md §5, level 2): the
 (q-block × kv-block) score grid of flash attention is a 2D index space.
 Traversing it row-major re-streams every KV block for every q block; a
 Morton/Hilbert traversal visits a 2×2 (then 4×4, …) neighbourhood of

@@ -70,22 +70,53 @@ def gol3d_step(cube: jnp.ndarray, *, g: int, T: int = 8,
     return unblockize(nxt, M, kind=block_kind)
 
 
+_ROW_PLANS: dict = {}
+_ROW_PLANS_CAP = 256
+
+
+def _row_plan(idx: np.ndarray, line: int, plan_key=None):
+    """(unique rows covering idx, per-element position) — cached by key.
+
+    The np.unique/searchsorted plan depends only on (idx, line); callers
+    with a stable idx provenance (pack_surface: one face of one ordering)
+    pass ``plan_key`` so repeated packs of the same face skip the O(|idx|
+    log |idx|) host work. LRU-capped like layout.device_constant.
+    """
+    key = None if plan_key is None else (plan_key, line)
+    if key is not None:
+        hit = _ROW_PLANS.get(key)
+        if hit is not None:
+            _ROW_PLANS[key] = _ROW_PLANS.pop(key)  # move-to-end
+            return hit
+    idx = np.asarray(idx)
+    rows = np.unique(idx // line).astype(np.int32)
+    pos = (np.searchsorted(rows, idx // line) * line + idx % line).astype(np.int32)
+    rows.setflags(write=False)
+    pos.setflags(write=False)
+    if key is not None:  # numpy only — trace-safe to cache (cf. device_constant)
+        while len(_ROW_PLANS) >= _ROW_PLANS_CAP:
+            _ROW_PLANS.pop(next(iter(_ROW_PLANS)))
+        _ROW_PLANS[key] = (rows, pos)
+    return rows, pos
+
+
 def sfc_gather_take(data: jnp.ndarray, idx: np.ndarray, *, line: int = 64,
-                    use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+                    use_kernel: bool = False, interpret: bool = True,
+                    plan_key=None) -> jnp.ndarray:
     """data[idx] for a flat array, via line-granularity kernel gather.
 
     Kernel path: fetch the unique ``line``-sized rows covering ``idx``
     (one scalar-prefetched DMA each), then select elements. The row count
     is the modelled HBM traffic — SFC layouts need fewer rows (paper
-    Figs 11/15 re-expressed). Exact for any idx.
+    Figs 11/15 re-expressed). Exact for any idx. ``plan_key`` (hashable,
+    identifying idx's provenance) memoises the row plan across calls.
     """
     idx = np.asarray(idx)
     if not use_kernel:
         return jnp.take(data, jnp.asarray(idx))
     n = data.shape[0]
     assert n % line == 0, (n, line)
-    rows = np.unique(idx // line).astype(np.int32)
-    pos = np.searchsorted(rows, idx // line) * line + (idx % line)
+    rows, pos = _row_plan(idx, line, plan_key)
     got = gather_rows(data.reshape(n // line, line), jnp.asarray(rows),
                       interpret=interpret)
     return got.reshape(-1)[jnp.asarray(pos)]
@@ -97,11 +128,12 @@ def pack_surface(data_path: jnp.ndarray, spec: OrderingSpec, M: int, g: int,
     """Pack one face of a path-ordered cube into a contiguous buffer.
 
     ``data_path`` is the (M³,) cube in ``spec`` order (apply_ordering).
-    Buffer order is curve-visit order p_t (paper §3.2).
+    Buffer order is curve-visit order p_t (paper §3.2). The row plan is
+    cached on (spec, M, g, face, line) across calls.
     """
     idx = surface_path_indices(spec, M, g, face)
     return sfc_gather_take(data_path, idx, line=line, use_kernel=use_kernel,
-                           interpret=interpret)
+                           interpret=interpret, plan_key=(spec, M, g, face))
 
 
 def unpack_surface(data_path: jnp.ndarray, buf: jnp.ndarray,

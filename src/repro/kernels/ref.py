@@ -6,9 +6,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .rules import get_rule
+
 __all__ = ["stencil_sum_ref", "gol_rule_ref", "gol3d_step_ref",
            "assemble_halo_ref", "stencil_sum_resident_ref",
-           "gather_rows_ref", "attention_ref"]
+           "stencil_fused_ref", "gather_rows_ref", "attention_ref"]
 
 
 def stencil_sum_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
@@ -64,21 +66,35 @@ def stencil_sum_resident_ref(store: jnp.ndarray, weights: jnp.ndarray,
     return stencil_sum_ref(assemble_halo_ref(store, nbr, g), weights)
 
 
+def stencil_fused_ref(store: jnp.ndarray, weights: jnp.ndarray,
+                      nbr: jnp.ndarray, *, S: int = 1,
+                      rule: str = "gol") -> jnp.ndarray:
+    """Oracle for stencil3d.stencil_step_fused: the temporal-blocked form.
+
+    Assembles the wide (T+2·S·g)³ window once, then runs S substeps of
+    tap-sum + rule with the window shrinking by g per side — the exact
+    computation the fused kernel performs in VMEM, vectorised over nb.
+    Bit-identical (f32 stores) to S sequential resident steps.
+    """
+    g = (weights.shape[0] - 1) // 2
+    r = get_rule(rule)
+    x = assemble_halo_ref(store, nbr, S * g).astype(jnp.float32)
+    for _ in range(S):
+        tap = stencil_sum_ref(x, weights)
+        centre = x[:, g:-g, g:-g, g:-g]
+        x = r.apply(centre, tap, g)
+    return x.astype(store.dtype)
+
+
 def gol_rule_ref(state: jnp.ndarray, neigh_sum: jnp.ndarray, g: int) -> jnp.ndarray:
     """Generalised Game-of-Life rule (paper's gol3d, stencil radius g).
 
-    With n = (2g+1)³ - 1 neighbours, thresholds scale with the classic
-    2D 8-neighbour rule: survive in [2,3]·n/8, born at exactly round(3n/8).
-    For g=1 (n=26): survive 6..9, born 9 — a standard 3D GoL variant.
+    Thresholds per rules.gol_thresholds — for g=1 (n=26): survive 6..9,
+    born 9, a standard 3D GoL variant. Kept as the stable oracle entry
+    point; the logic itself lives in the kernels/rules.py registry so
+    the fused kernel shares it verbatim.
     """
-    n = (2 * g + 1) ** 3 - 1
-    lo = (2 * n) // 8
-    hi = (3 * n) // 8
-    born = hi
-    alive = state > 0.5
-    s = neigh_sum
-    nxt = jnp.where(alive, (s >= lo) & (s <= hi), s == born)
-    return nxt.astype(state.dtype)
+    return get_rule("gol").apply(state, neigh_sum, g).astype(state.dtype)
 
 
 def gol3d_step_ref(cube: jnp.ndarray, g: int, periodic: bool = True) -> jnp.ndarray:

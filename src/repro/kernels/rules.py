@@ -1,0 +1,82 @@
+"""Update-rule registry for the fused stencil epilogue (DESIGN.md §4).
+
+The temporal-blocked kernel (stencil3d.stencil_step_fused) applies
+``state' = rule(state, tap_sum)`` after every in-VMEM tap sum, so the
+rule is the only workload-specific piece of the pipeline. Registering it
+here — one pure-jnp callable shared verbatim by the Pallas kernel, the
+jnp oracles (kernels/ref.py) and the fused driver
+(stencil/pipeline.ResidentPipeline) — keeps the three paths bit-identical
+by construction and lets a new workload ride the whole resident
+machinery by adding one entry.
+
+Rules compute in float32 (the kernels' accumulation dtype); callers cast
+back to the store dtype at the step boundary. ``tap_sum`` is the
+weighted (2g+1)³ tap sum of the *current* state — with the default
+zero-centre uniform weights (ops.uniform_weights) it is the neighbour
+count/sum the classic rules expect.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax.numpy as jnp
+
+__all__ = ["UpdateRule", "RULES", "get_rule", "gol_thresholds"]
+
+
+@dataclass(frozen=True)
+class UpdateRule:
+    """name: registry key; apply(centre_f32, tap_sum_f32, g) -> next_f32."""
+    name: str
+    apply: Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
+    doc: str = ""
+
+
+def gol_thresholds(g: int) -> tuple[int, int, int]:
+    """(survive_lo, survive_hi, born) for the generalised GoL rule.
+
+    With n = (2g+1)³ - 1 neighbours, thresholds scale with the classic
+    2D 8-neighbour rule: survive in [2,3]·n/8, born at exactly round(3n/8).
+    For g=1 (n=26): survive 6..9, born 9 — a standard 3D GoL variant.
+    """
+    n = (2 * g + 1) ** 3 - 1
+    lo = (2 * n) // 8
+    hi = (3 * n) // 8
+    return lo, hi, hi
+
+
+def _gol(centre: jnp.ndarray, tap: jnp.ndarray, g: int) -> jnp.ndarray:
+    lo, hi, born = gol_thresholds(g)
+    alive = centre > 0.5
+    nxt = jnp.where(alive, (tap >= lo) & (tap <= hi), tap == born)
+    return nxt.astype(jnp.float32)
+
+
+def _jacobi(centre: jnp.ndarray, tap: jnp.ndarray, g: int) -> jnp.ndarray:
+    # Jacobi relaxation / explicit heat step: box-filter mean over the
+    # (2g+1)³ cube (centre + the zero-centre-weighted neighbour sum).
+    n = (2 * g + 1) ** 3 - 1
+    return (centre + tap) / jnp.float32(n + 1)
+
+
+def _identity(centre: jnp.ndarray, tap: jnp.ndarray, g: int) -> jnp.ndarray:
+    return tap
+
+
+RULES: dict[str, UpdateRule] = {
+    "gol": UpdateRule("gol", _gol, "generalised 3D Game of Life (paper §4)"),
+    "jacobi": UpdateRule("jacobi", _jacobi, "Jacobi/heat box-filter relaxation"),
+    "identity": UpdateRule("identity", _identity, "raw weighted stencil sum"),
+}
+
+
+def get_rule(rule: str | UpdateRule) -> UpdateRule:
+    if isinstance(rule, UpdateRule):
+        return rule
+    try:
+        return RULES[rule]
+    except KeyError:
+        raise ValueError(
+            f"unknown update rule {rule!r}; known: {sorted(RULES)}") from None

@@ -22,14 +22,27 @@ store in HBM and *no* per-step repack; because blocks are curve-ordered,
 consecutive grid steps ask for overlapping neighbour sets, which Pallas'
 revisiting-block elision turns into VMEM reuse.
 
-VMEM budget: ``4B·((T+2g)³ + T³ + (2g+1)³)`` — e.g. T=32, g=1 → ~290 KiB,
-far under the ~16 MiB/core budget, leaving room for Pallas' double
-buffering of the streamed blocks.  MXU note: a pure stencil is VPU work
-(elementwise FMA); both kernels unroll the (2g+1)³ taps for g ≤ 2 so the
+``stencil_step_fused`` — the *temporal-blocked* form (DESIGN.md §4): the
+resident kernel above still writes an f32 tap-sum array to HBM and
+leaves the update rule to a second pass. This kernel fuses the rule
+epilogue (kernels/rules.py) into the launch and runs ``S`` whole
+substeps per HBM round-trip: assemble a ``(T+2·S·g)³`` window from
+neighbour slices of extent ``S·g``, then alternate tap-sum + rule in
+VMEM with the window shrinking by ``g`` per side each substep, and
+write the next ``T³`` state tile once. K timesteps cost ``ceil(K/S)``
+launches; per substep the HBM stream drops from
+``(T+2g)³ + 3·T³`` (resident + rule pass) to
+``((T+2·S·g)³ + T³)/S`` — the locality-for-bandwidth trade of
+Reissmann & Jahre, paid for with redundant boundary flops.
+
+VMEM budget: ``4B·(2·(T+2Sg)³ + 2·T³ + (2g+1)³)`` — e.g. T=8, g=1, S=4
+→ ~37 KiB; the ``plan()`` autotuner in stencil/pipeline.py picks (T, S)
+against the ~16 MiB/core budget. MXU note: a pure stencil is VPU work
+(elementwise FMA); the kernels unroll the (2g+1)³ taps for g ≤ 2 so the
 adds pipeline, and fall back to a ``fori_loop`` for larger g to bound
 code size. Production layouts would pad the minor dim to the 128-lane
 register width; correctness here is validated in interpret mode against
-ref.stencil_sum_ref / ref.stencil_sum_resident_ref.
+ref.stencil_sum_ref / ref.stencil_sum_resident_ref / ref.stencil_fused_ref.
 """
 
 from __future__ import annotations
@@ -41,7 +54,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["stencil_sum_blocks", "stencil_sum_resident"]
+from .rules import get_rule
+
+__all__ = ["stencil_sum_blocks", "stencil_sum_resident", "stencil_step_fused"]
 
 _UNROLL_TAP_LIMIT = 125  # unroll (2g+1)^3 taps up to g=2
 
@@ -103,15 +118,13 @@ def stencil_sum_blocks(blocks: jnp.ndarray, weights: jnp.ndarray, *,
 
 # -------------------------------------------------------------- resident form
 
-def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
-    """Assemble the (T+2g)³ window from 27 neighbour slices, then tap-sum.
+def _assemble_window(refs) -> jnp.ndarray:
+    """Concatenate 27 piece refs (OFFSETS_FULL order) into one f32 window.
 
-    refs = 27 piece refs (in OFFSETS_FULL order) + the output ref. Piece
-    (a,b,c) has shape (1, sz[a], sz[b], sz[c]) with sz = (g, T, g): low
-    halo, centre span, high halo along each axis.
+    Piece (a,b,c) has shape (1, sz[a], sz[b], sz[c]) with sz = (h, T, h):
+    low halo, centre span, high halo along each axis (h = halo width).
     """
-    o_ref = refs[-1]
-    pieces = [r[0].astype(jnp.float32) for r in refs[:-1]]
+    pieces = [r[0].astype(jnp.float32) for r in refs]
     slabs = []
     n = 0
     for _a in range(3):
@@ -120,7 +133,13 @@ def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
             planes.append(jnp.concatenate(pieces[n:n + 3], axis=2))
             n += 3
         slabs.append(jnp.concatenate(planes, axis=1))
-    x = jnp.concatenate(slabs, axis=0)  # (T+2g, T+2g, T+2g)
+    return jnp.concatenate(slabs, axis=0)  # (T+2h, T+2h, T+2h)
+
+
+def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
+    """Assemble the (T+2g)³ window from 27 neighbour slices, then tap-sum."""
+    o_ref = refs[-1]
+    x = _assemble_window(refs[:-1])
     o_ref[0] = _tap_sum(x, w_ref, T, s)
 
 
@@ -128,6 +147,27 @@ def _piece_index(i, nbr_ref, *, col: int, bidx: tuple):
     # nbr_ref[i, col] is the path position of the neighbour block this
     # piece is sliced from; bidx addresses the slice in block-shape units.
     return (nbr_ref[i, col],) + bidx
+
+
+def _piece_specs(T: int, h: int) -> list:
+    """The 27 neighbour-slice BlockSpecs for a halo of width h (h | T).
+
+    Piece extent per axis is (h, T, h) — low halo, centre, high halo —
+    and the low piece reads the neighbour's *last* h-slab while centre
+    and high read from its first, addressed in block-shape units.
+    """
+    sz = (h, T, h)
+    last = (T // h - 1, 0, 0)
+    specs = []
+    for a in range(3):
+        for b in range(3):
+            for c in range(3):
+                col = a * 9 + b * 3 + c
+                specs.append(pl.BlockSpec(
+                    (1, sz[a], sz[b], sz[c]),
+                    functools.partial(_piece_index, col=col,
+                                      bidx=(last[a], last[b], last[c]))))
+    return specs
 
 
 @functools.partial(jax.jit, static_argnames=("g", "interpret"))
@@ -154,22 +194,84 @@ def stencil_sum_resident(store: jnp.ndarray, weights: jnp.ndarray,
     if g > T or T % g:
         raise ValueError(f"resident kernel needs g | T, got T={T}, g={g}")
 
-    sz = (g, T, g)                 # piece extent per axis: lo, mid, hi
-    last = (T // g - 1, 0, 0)      # block index of the slice: lo reads the
-    #                                neighbour's *last* g-slab, mid/hi its first
     in_specs = [pl.BlockSpec((s, s, s), lambda i, nbr_ref: (0, 0, 0))]
-    for a in range(3):
-        for b in range(3):
-            for c in range(3):
-                col = a * 9 + b * 3 + c
-                in_specs.append(pl.BlockSpec(
-                    (1, sz[a], sz[b], sz[c]),
-                    functools.partial(_piece_index, col=col,
-                                      bidx=(last[a], last[b], last[c]))))
+    in_specs += _piece_specs(T, g)
     kern = functools.partial(_resident_kernel, T=T, s=s)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((nb, T, T, T), jnp.float32),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(nb,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, T, T, T), lambda i, nbr_ref: (i, 0, 0, 0)),
+        ),
+        interpret=interpret,
+    )(nbr.astype(jnp.int32), weights, *([store] * 27))
+
+
+# ------------------------------------------------------- temporal-blocked form
+
+def _fused_kernel(nbr_ref, w_ref, *refs, T: int, s: int, g: int, S: int,
+                  rule):
+    """S substeps of tap-sum + update rule, entirely in VMEM.
+
+    The assembled window starts at (T+2·S·g)³ and shrinks by g per side
+    each substep — boundary sites are recomputed redundantly instead of
+    re-read from HBM (DESIGN.md §4). Nothing intermediate (tap sums,
+    partial states) ever touches HBM; the single write is the T³ tile.
+    """
+    o_ref = refs[-1]
+    x = _assemble_window(refs[:-1])  # (T+2·S·g,)³ f32
+    for u in range(S):
+        out_e = T + 2 * g * (S - 1 - u)      # window edge after this substep
+        tap = _tap_sum(x, w_ref, out_e, s)
+        centre = x[g:g + out_e, g:g + out_e, g:g + out_e]
+        x = rule.apply(centre, tap, g)
+    o_ref[0] = x.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "S", "rule", "interpret"))
+def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
+                       nbr: jnp.ndarray, *, g: int, S: int = 1,
+                       rule: str = "gol",
+                       interpret: bool = True) -> jnp.ndarray:
+    """S fused timesteps over the resident store, one HBM round-trip.
+
+    store:   (nb, T, T, T) — SFC-ordered, no halo duplication, persists
+             across launches (stencil/pipeline.ResidentPipeline)
+    weights: (2g+1, 2g+1, 2g+1) tap weights (ops.uniform_weights for the
+             classic neighbour-count rules)
+    nbr:     (nb, 27) int32 periodic neighbour table (core.neighbors),
+             scalar-prefetched
+    g:       stencil radius; S: substeps per launch; rule: kernels/rules.py
+             registry key ("gol" | "jacobi" | "identity")
+    returns: (nb, T, T, T) in store dtype — bit-identical (for f32
+             stores) to S sequential resident steps of the same rule.
+
+    Halo pieces have extent S·g and are addressed in block-shape units,
+    so S·g must divide T (deep temporal blocking needs S·g ≤ T: the
+    window may only reach into directly adjacent blocks). Substeps run
+    in f32; non-f32 stores would round once per launch instead of once
+    per step, so bit-identity to the sequential path is f32-only.
+    """
+    nb, T = store.shape[0], store.shape[1]
+    s = 2 * g + 1
+    assert store.shape == (nb, T, T, T), store.shape
+    assert weights.shape == (s, s, s), (weights.shape, s)
+    assert nbr.shape == (nb, 27), nbr.shape
+    h = S * g
+    if S < 1 or h > T or T % h:
+        raise ValueError(
+            f"fused kernel needs 1 <= S and S*g | T, got T={T}, g={g}, S={S}")
+
+    in_specs = [pl.BlockSpec((s, s, s), lambda i, nbr_ref: (0, 0, 0))]
+    in_specs += _piece_specs(T, h)
+    kern = functools.partial(_fused_kernel, T=T, s=s, g=g, S=S,
+                             rule=get_rule(rule))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((nb, T, T, T), store.dtype),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(nb,),

@@ -1,6 +1,6 @@
 """Elastic re-scaling: restore a checkpoint onto a different mesh.
 
-The fault-tolerance story at 1000+ nodes (DESIGN.md §5): when a pod (or
+The fault-tolerance story at 1000+ nodes (DESIGN.md §6): when a pod (or
 any 2^k slice) is lost, the job restarts on the surviving mesh; because
 checkpoints store *logical* arrays, restore is a pure resharding. This
 driver demonstrates/validates that end to end on host devices:

@@ -13,7 +13,10 @@ Two execution modes (DESIGN.md §3):
   kept as the equivalence baseline;
 - fused *resident* (``run_resident``): blockize once, run K steps on the
   persistent curve-ordered store with in-kernel halo streaming
-  (stencil/pipeline.py), unblockize once.
+  (stencil/pipeline.py), unblockize once. ``substeps`` (S) additionally
+  temporal-blocks the resident form — S whole updates per HBM
+  round-trip (DESIGN.md §4); ``substeps=0`` lets the pipeline's
+  ``plan()`` autotuner pick (T, S) under the VMEM budget.
 """
 
 from __future__ import annotations
@@ -40,6 +43,7 @@ class Gol3dConfig:
     g: int = 1                       # stencil radius
     ordering: OrderingSpec = ROW_MAJOR
     block_T: int = 8                 # SFC block edge for the kernel pipeline
+    substeps: int = 1                # S per fused launch; 0 = autotune (T, S)
     use_kernel: bool = False         # Pallas kernel (interpret on CPU) vs jnp
     density: float = 0.3             # initial live fraction
     seed: int = 0
@@ -90,10 +94,17 @@ class Gol3d:
         return self.state_path
 
     def resident_pipeline(self) -> ResidentPipeline:
-        """The fused driver over this app's block layout (DESIGN.md §3)."""
+        """The fused driver over this app's block layout (DESIGN.md §3–§4).
+
+        ``cfg.substeps`` threads straight through as the pipeline's S;
+        ``substeps=0`` delegates (T, S) to the ``plan()`` autotuner.
+        """
         cfg = self.cfg
+        if cfg.substeps == 0:
+            return ResidentPipeline.plan(cfg.M, g=cfg.g, kind=self.block_kind,
+                                         use_kernel=cfg.use_kernel)
         return ResidentPipeline(M=cfg.M, T=cfg.block_T, g=cfg.g,
-                                kind=self.block_kind,
+                                kind=self.block_kind, S=cfg.substeps,
                                 use_kernel=cfg.use_kernel)
 
     def run_resident(self, n_steps: int) -> jnp.ndarray:

@@ -1,8 +1,9 @@
-"""Fused resident-block-store stencil driver (DESIGN.md §3).
+"""Fused resident-block-store stencil driver (DESIGN.md §3–§4).
 
 The paper's central claim is that SFC orderings pay off only when the
 curve order *is* the storage order — reorder once, iterate many times
-(§2, §4). This driver enforces that discipline for the gol3d workload:
+(§2, §4 of the paper). This driver enforces that discipline for the
+stencil workloads:
 
     blockize once  →  K timesteps entirely in curve-ordered block form
                       (halo assembled in-kernel from the neighbour
@@ -10,13 +11,20 @@ curve order *is* the storage order — reorder once, iterate many times
                    →  unblockize once.
 
 The per-step state is exactly one ``(nb, T, T, T)`` block store — M³
-elements, no ``((T+2g)/T)³`` halo duplication — and consecutive steps
+elements, no ``((T+2g)/T)³`` halo duplication — and consecutive launches
 ping-pong between two such stores: the K-step runner is jit'd with the
-input store donated, so XLA aliases the output of step k as the input
-of step k+1 (classic double buffering) instead of allocating per step.
+input store donated, so XLA aliases the output of launch k as the input
+of launch k+1 (classic double buffering) instead of allocating per step.
 
-``bytes_per_step`` quantifies the win over the repack pipeline
-(kernels/ops.gol3d_step) for the benchmark trajectory.
+Temporal blocking (DESIGN.md §4): with ``S`` substeps per launch the
+kernel assembles a ``(T+2·S·g)³`` window and runs S whole tap-sum +
+update-rule substeps in VMEM before writing the T³ tile once — K
+timesteps become ``ceil(K/S)`` HBM round-trips. ``plan()`` autotunes
+(T, S) by minimising the modelled bytes/substep under the VMEM budget.
+
+The ``*_items_per_*`` helpers are the single source of HBM-traffic
+accounting shared by benchmarks/stencil_update.py and
+benchmarks/kernel_bench.py (asserted consistent in tests).
 """
 
 from __future__ import annotations
@@ -31,22 +39,35 @@ from repro.core.layout import blockize, unblockize
 from repro.core.neighbors import neighbor_table_device
 from repro.kernels import ref as kref
 from repro.kernels.ops import uniform_weights
-from repro.kernels.stencil3d import stencil_sum_resident
+from repro.kernels.rules import get_rule
+from repro.kernels.stencil3d import stencil_step_fused
 
-__all__ = ["ResidentPipeline", "repack_bytes_per_step", "resident_bytes_per_step"]
+__all__ = [
+    "ResidentPipeline", "VMEM_BUDGET_BYTES", "fused_vmem_bytes",
+    "repack_items_per_step", "repack_bytes_per_step",
+    "fused_items_per_launch", "resident_bytes_per_step",
+    "resident_unfused_items_per_step", "resident_unfused_bytes_per_step",
+]
+
+# Conservative per-core VMEM working-set budget the autotuner plans
+# against (real TPU cores have ~16 MiB; leave half for Pallas' pipeline
+# buffers, metadata, and the scalar-prefetch tables).
+VMEM_BUDGET_BYTES = 8 * 2 ** 20
 
 
 @dataclass(frozen=True)
 class ResidentPipeline:
-    """gol3d over a persistent curve-ordered block store.
+    """Stencil updates over a persistent curve-ordered block store.
 
     M:          cube edge (power of 2)
-    T:          block edge (T | M; g | T for the kernel path)
+    T:          block edge (T | M; S·g | T for the kernel path)
     g:          stencil radius (periodic boundaries)
     kind:       block-grid curve — "morton" | "hilbert" | "row_major" |
                 "column_major" (core.neighbors.block_kind_of maps an
                 OrderingSpec here)
-    use_kernel: Pallas resident kernel (interpret on CPU) vs jnp oracle
+    S:          substeps fused into one kernel launch (temporal blocking)
+    rule:       update rule registry key (kernels/rules.py)
+    use_kernel: Pallas fused kernel (interpret on CPU) vs jnp oracle
     """
     M: int
     T: int = 8
@@ -54,9 +75,19 @@ class ResidentPipeline:
     kind: str = "morton"
     use_kernel: bool = False
     interpret: bool = True
+    S: int = 1
+    rule: str = "gol"
 
     def __post_init__(self):
         assert self.M % self.T == 0, (self.M, self.T)
+        if not self._valid_S(self.S):
+            raise ValueError(
+                f"temporal blocking needs 1 <= S*g <= T and S*g | T, "
+                f"got T={self.T}, g={self.g}, S={self.S}")
+
+    def _valid_S(self, S: int) -> bool:
+        h = S * self.g
+        return S >= 1 and h <= self.T and self.T % h == 0
 
     @property
     def nt(self) -> int:
@@ -66,6 +97,47 @@ class ResidentPipeline:
     def nb(self) -> int:
         return self.nt ** 3
 
+    # -- autotuner ---------------------------------------------------------
+    @classmethod
+    def plan(cls, M: int, g: int = 1, kind: str = "morton",
+             rule: str = "gol", n_steps: int = 10, *,
+             vmem_limit: int = VMEM_BUDGET_BYTES, max_S: int = 8,
+             use_kernel: bool = False, interpret: bool = True,
+             itemsize: int = 4) -> "ResidentPipeline":
+        """Pick (T, S) minimising modelled HBM bytes/substep under VMEM.
+
+        Searches power-of-two block edges T | M (with g | T) and substep
+        counts S ≤ max_S (with S·g | T), keeps candidates whose fused
+        working set fits ``vmem_limit``, and minimises
+        ``resident_bytes_per_step(M, T, g, n_steps, S=S)``. The cost is
+        non-monotone in S at fixed T — window inflation (T+2·S·g)³/S
+        eventually out-grows the S× amortisation — so this is a real
+        search, not "largest S that fits". Ties break toward smaller
+        windows.
+        """
+        best = None
+        T = 1
+        while T <= M:
+            if M % T == 0 and T % g == 0:
+                S = 1
+                while S <= max_S:
+                    h = S * g
+                    if h <= T and T % h == 0:
+                        vm = fused_vmem_bytes(T, g, S, itemsize)
+                        if vm <= vmem_limit:
+                            cost = resident_bytes_per_step(
+                                M, T, g, n_steps, itemsize, S=S)
+                            if best is None or (cost, vm) < best[0]:
+                                best = ((cost, vm), T, S)
+                    S *= 2
+            T *= 2
+        if best is None:
+            raise ValueError(
+                f"no (T, S) fits vmem_limit={vmem_limit} for M={M}, g={g}")
+        _, T, S = best
+        return cls(M=M, T=T, g=g, kind=kind, S=S, rule=rule,
+                   use_kernel=use_kernel, interpret=interpret)
+
     # -- layout boundary (paid once per K-step run, not per step) ---------
     def to_blocks(self, cube: jnp.ndarray) -> jnp.ndarray:
         return blockize(cube, self.T, kind=self.kind)
@@ -74,30 +146,53 @@ class ResidentPipeline:
         return unblockize(store, self.M, kind=self.kind)
 
     # -- the resident step -------------------------------------------------
-    def step_fn(self):
-        """(store -> store) single gol3d update, all in block order."""
+    def step_fn(self, substeps: int | None = None):
+        """(store -> store): ``substeps`` (default S) fused updates.
+
+        Kernel mode is one ``stencil_step_fused`` launch; oracle mode is
+        the same math as sequential jnp substeps — bit-identical for f32
+        stores (substeps accumulate in f32 on both paths).
+        """
+        S = self.S if substeps is None else substeps
+        assert self._valid_S(S), (self.T, self.g, S)
         g, w = self.g, uniform_weights(self.g)
         nbr = neighbor_table_device(self.kind, self.nt)
+        rule = get_rule(self.rule)
         use_kernel, interpret = self.use_kernel, self.interpret
 
         def step(store):
             if use_kernel:
-                neigh = stencil_sum_resident(store, w, nbr, g=g,
-                                             interpret=interpret)
-            else:
-                neigh = kref.stencil_sum_resident_ref(store, w, nbr)
-            return kref.gol_rule_ref(store, neigh, g).astype(store.dtype)
+                return stencil_step_fused(store, w, nbr, g=g, S=S,
+                                          rule=rule.name, interpret=interpret)
+            out = store
+            for _ in range(S):
+                neigh = kref.stencil_sum_resident_ref(out, w, nbr)
+                out = rule.apply(out.astype(jnp.float32), neigh, g
+                                 ).astype(store.dtype)
+            return out
 
         return step
 
     def run_fn(self, n_steps: int):
-        """jit'd fused K-step runner over the donated (double-buffered) store."""
+        """jit'd K-step runner: ceil(K/S) fused launches over the donated
+        (double-buffered) store; a K % S remainder runs as one smaller
+        fused launch when S·g-divisibility allows, else step by step."""
+        full, rem = divmod(n_steps, self.S)
         step = self.step_fn()
+        if rem and self._valid_S(rem):
+            tail_steps, tail = 1, self.step_fn(rem)
+        else:
+            tail_steps, tail = rem, (self.step_fn(1) if rem else None)
         donate = (0,) if jax.default_backend() != "cpu" else ()
 
         @functools.partial(jax.jit, donate_argnums=donate)
         def run(store):
-            return jax.lax.fori_loop(0, n_steps, lambda _, s: step(s), store)
+            if full:
+                store = jax.lax.fori_loop(0, full, lambda _, s: step(s), store)
+            if tail is not None:
+                store = jax.lax.fori_loop(0, tail_steps,
+                                          lambda _, s: tail(s), store)
+            return store
 
         return run
 
@@ -110,37 +205,89 @@ class ResidentPipeline:
     # -- modelled HBM traffic (benchmarks/stencil_update.py) ---------------
     def bytes_per_step(self, n_steps: int, itemsize: int = 4) -> float:
         return resident_bytes_per_step(self.M, self.T, self.g, n_steps,
-                                       itemsize)
+                                       itemsize, S=self.S)
+
+    def vmem_bytes(self, itemsize: int = 4) -> int:
+        return fused_vmem_bytes(self.T, self.g, self.S, itemsize)
 
 
-def repack_bytes_per_step(M: int, T: int, g: int, itemsize: int = 4) -> float:
-    """Modelled HBM bytes per step of the repack pipeline (ops.gol3d_step).
+def fused_vmem_bytes(T: int, g: int, S: int, itemsize: int = 4) -> int:
+    """Modelled VMEM working set of one fused-kernel grid step.
+
+    Two window-sized live arrays (the assembled window plus the tap/rule
+    temporary), the T³ output tile double-buffered, and the tap weights.
+    """
+    W3 = (T + 2 * S * g) ** 3
+    return itemsize * (2 * W3 + 2 * T ** 3 + (2 * g + 1) ** 3)
+
+
+# ---------------------------------------------------------------------------
+# HBM-traffic accounting — the one source of truth for every benchmark row.
+# ``*_items_per_*`` count array elements; ``*_bytes_per_step`` scale by
+# itemsize and amortise the one-off layout boundary over the run.
+# ---------------------------------------------------------------------------
+
+def repack_items_per_step(M: int, T: int, g: int) -> int:
+    """HBM items per step of the repack pipeline (ops.gol3d_step).
 
     Every step: read the M³ cube, write the halo-duplicated (nb·(T+2g)³)
     store, stream it back through the kernel, write nb·T³ partial sums,
-    then read them again to rebuild the canonical cube. The
-    ((T+2g)/T)³ inflation and the O(M³) repack recur each step.
+    then read them again (plus the centre) for the rule and write the
+    canonical cube back. The ((T+2g)/T)³ inflation and the O(M³) repack
+    recur each step.
     """
     nb = (M // T) ** 3
     W3 = (T + 2 * g) ** 3
     cube, halo, out = M ** 3, nb * W3, nb * T ** 3
     #      repack read + halo write + kernel read + kernel write
     #      + rule read/write + unblockize read + cube write
-    return itemsize * float(cube + halo + halo + out + 2 * out + out + cube)
+    return cube + halo + halo + out + 2 * out + out + cube
+
+
+def repack_bytes_per_step(M: int, T: int, g: int, itemsize: int = 4) -> float:
+    return itemsize * float(repack_items_per_step(M, T, g))
+
+
+def resident_unfused_items_per_step(M: int, T: int, g: int) -> int:
+    """HBM items per step of the PR-1 resident path (pre-fusion baseline).
+
+    The kernel reads (T+2g)³ per block and writes an f32 tap-sum array;
+    a separate rule pass then reads store+sums and writes the next store
+    — 2·T³ per block beyond the kernel stream, every step.
+    """
+    nb = (M // T) ** 3
+    return nb * (T + 2 * g) ** 3 + 3 * nb * T ** 3
+
+
+def resident_unfused_bytes_per_step(M: int, T: int, g: int, n_steps: int,
+                                    itemsize: int = 4) -> float:
+    per_step = resident_unfused_items_per_step(M, T, g)
+    return itemsize * (per_step + _boundary_items(M) / max(n_steps, 1))
+
+
+def fused_items_per_launch(M: int, T: int, g: int, S: int) -> int:
+    """HBM items of one fused launch: read (T+2·S·g)³ + write T³ per block.
+
+    No tap-sum array, no rule pass — S substeps ride one round-trip.
+    """
+    nb = (M // T) ** 3
+    return nb * (T + 2 * S * g) ** 3 + nb * T ** 3
 
 
 def resident_bytes_per_step(M: int, T: int, g: int, n_steps: int,
-                            itemsize: int = 4) -> float:
-    """Modelled HBM bytes per step of the resident pipeline, amortised.
+                            itemsize: int = 4, *, S: int = 1) -> float:
+    """Modelled HBM bytes per timestep of the fused resident pipeline.
 
-    Per step the kernel reads exactly (T+2g)³ per block (centre + halo
-    slices gathered from neighbour blocks — no duplicated halo store)
-    and writes T³; the rule pass reads/writes the T³ store. The one-off
-    blockize/unblockize (read M³ + write M³ each) amortises over K.
+    The unit is unchanged from PR-1: one whole gol3d/jacobi timestep (a
+    "substep" of a fused launch is a full timestep). One launch advances
+    S of them, so the per-launch stream amortises by S; the one-off
+    blockize/unblockize (read M³ + write M³ each) amortises over the
+    whole K-step run.
     """
-    nb = (M // T) ** 3
-    W3 = (T + 2 * g) ** 3
-    cube, out = M ** 3, nb * T ** 3
-    per_step = nb * W3 + out + 2 * out
-    boundary = 2 * (2 * cube)  # blockize + unblockize, once per run
-    return itemsize * float(per_step + boundary / max(n_steps, 1))
+    per_substep = fused_items_per_launch(M, T, g, S) / S
+    return itemsize * (per_substep + _boundary_items(M) / max(n_steps, 1))
+
+
+def _boundary_items(M: int) -> int:
+    # blockize + unblockize: read M³ + write M³ each, once per run
+    return 4 * M ** 3
