@@ -1,0 +1,105 @@
+"""Perf-trajectory differ: compare two rev-stamped ``BENCH_*.json`` files.
+
+CI uploads a ``{"git_rev", "rows"}`` JSON per push (benchmarks/run.py
+--json); this tool diffs two of them row by row and **exits nonzero** on
+any regression beyond the threshold, so a PR that slows a benchmarked
+path turns the pipeline red against the previous artifact.
+
+    python -m benchmarks.diff OLD.json NEW.json [--threshold PCT]
+                              [--min-us US] [--keys k1,k2,...]
+
+- timings: a row regresses when ``new.us_per_call`` exceeds
+  ``max(old.us_per_call, MIN_US) * (1 + PCT/100)`` — the baseline is
+  floored at ``--min-us`` (default 50 µs) so sub-noise-floor rows can't
+  flag on jitter, yet a formerly-tiny row that turns slow still trips;
+- ``--keys``: comma-separated *derived* numeric keys (e.g. the modelled
+  ``fused_bytes_per_substep``) checked with the same threshold — these
+  are deterministic model outputs, so use a tight threshold when the
+  model is meant to be frozen;
+- rows present on only one side are reported but never fail the diff
+  (benchmarks come and go across PRs).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> tuple[str, dict]:
+    with open(path) as f:
+        payload = json.load(f)
+    return payload.get("git_rev", "unknown"), {
+        r["name"]: r for r in payload["rows"]}
+
+
+def compare(old: dict, new: dict, threshold: float, min_us: float,
+            keys: list[str]) -> tuple[list[str], list[str]]:
+    """(regressions, notes) — human-readable lines per affected row."""
+    regressions, notes = [], []
+    factor = 1.0 + threshold / 100.0
+    for name in sorted(set(old) | set(new)):
+        if name not in old:
+            notes.append(f"+ {name} (new row)")
+            continue
+        if name not in new:
+            notes.append(f"- {name} (row removed)")
+            continue
+        o, n = old[name], new[name]
+        ou, nu = o["us_per_call"], n["us_per_call"]
+        # baseline floored at min_us: sub-noise-floor rows can't trip the
+        # gate by jitter, but a formerly-fast row blowing past the floor
+        # by more than the threshold still registers
+        if nu >= min_us and nu > max(ou, min_us) * factor:
+            regressions.append(
+                f"{name}: us_per_call {ou:.1f} -> {nu:.1f} "
+                f"(+{(nu / ou - 1) * 100:.0f}% > {threshold:.0f}%)")
+        for k in keys:
+            ov, nv = o["derived"].get(k), n["derived"].get(k)
+            if not isinstance(ov, (int, float)) or \
+                    not isinstance(nv, (int, float)) or ov <= 0:
+                continue
+            if nv > ov * factor:
+                regressions.append(
+                    f"{name}: {k} {ov:.0f} -> {nv:.0f} "
+                    f"(+{(nv / ov - 1) * 100:.0f}% > {threshold:.0f}%)")
+            elif nv != ov:
+                notes.append(f"~ {name}: {k} {ov:.0f} -> {nv:.0f}")
+    return regressions, notes
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.diff",
+        description="flag >X%% per-row regressions between two bench JSONs")
+    ap.add_argument("old")
+    ap.add_argument("new")
+    ap.add_argument("--threshold", type=float, default=25.0,
+                    help="regression threshold in percent (default 25)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="ignore timing rows faster than this (noise floor)")
+    ap.add_argument("--keys", default="",
+                    help="comma-separated derived numeric keys to also diff")
+    args = ap.parse_args(argv)
+
+    old_rev, old = load_rows(args.old)
+    new_rev, new = load_rows(args.new)
+    keys = [k for k in args.keys.split(",") if k]
+    regressions, notes = compare(old, new, args.threshold, args.min_us, keys)
+
+    print(f"# bench diff: {old_rev} -> {new_rev} "
+          f"({len(old)} -> {len(new)} rows, threshold {args.threshold:.0f}%)")
+    for line in notes:
+        print(line)
+    if regressions:
+        print(f"\n{len(regressions)} regression(s):", file=sys.stderr)
+        for line in regressions:
+            print(f"  REGRESSION {line}", file=sys.stderr)
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -24,6 +24,7 @@ import jax
 
 from repro.core import HILBERT, MORTON, ROW_MAJOR
 from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
+                           distributed_bytes_per_step, exchange_bytes_per_step,
                            repack_bytes_per_step, resident_bytes_per_step,
                            resident_unfused_bytes_per_step)
 
@@ -56,17 +57,23 @@ def resident_derived(M: int, T: int, g: int, S: int, n_steps: int) -> str:
     """Shared-accounting derived string for one resident row.
 
     Reports the fused model alongside the PR-1 unfused and repack
-    models so the perf trajectory shows all three on every row.
+    models, plus the distributed totals (HBM + modelled ICI for a mesh
+    shard of the same local M — DESIGN.md §7), so the perf trajectory
+    shows every pipeline form on every row.
     """
     fus_b = resident_bytes_per_step(M, T, g, n_steps, S=S)
     unf_b = resident_unfused_bytes_per_step(M, T, g, n_steps)
     rep_b = repack_bytes_per_step(M, T, g)
+    exc_b = exchange_bytes_per_step(M, g, S)
+    dst_b = distributed_bytes_per_step(M, T, g, n_steps, S=S)
     return (f"S={S}"
             f";fused_bytes_per_substep={fus_b:.0f}"
             f";unfused_bytes_per_step={unf_b:.0f}"
             f";repack_bytes_per_step={rep_b:.0f}"
             f";fused_vs_unfused={unf_b / fus_b:.3f}"
-            f";fused_vs_repack={rep_b / fus_b:.3f}")
+            f";fused_vs_repack={rep_b / fus_b:.3f}"
+            f";ici_bytes_per_step={exc_b:.0f}"
+            f";distributed_bytes_per_step={dst_b:.0f}")
 
 
 def resident_rows(sizes=(32, 64), stencils=(1, 2), T=8, n_steps=N_ITERS):

@@ -9,9 +9,12 @@ fused forms plus the (T, S) the plan() autotuner picks.
 
 Part 2: spawns itself with 8 host devices (the dry-run rule: never force
 device count in the parent process), decomposes a 32³ cube onto the
-mesh, runs 10 steps under each ordering, and verifies against the
-single-device oracle. This is the paper's parallel experiment (§4,
-second set) as a shard_map program.
+mesh, and runs 10 steps under each ordering two ways: the legacy
+per-step exchange (make_distributed_step) verified against the
+single-device oracle, and the communication-avoiding DistributedPipeline
+(one deep S·g exchange per S fused substeps, DESIGN.md §7) verified
+bit-identical to the per-step form. This is the paper's parallel
+experiment (§4, second set) as a shard_map program.
 
 Run: PYTHONPATH=src python examples/stencil_halo_demo.py
 """
@@ -79,8 +82,10 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core import ROW_MAJOR, MORTON, HILBERT, apply_ordering, undo_ordering
-from repro.stencil import make_stencil_mesh, make_distributed_step
+from repro.core import ROW_MAJOR, MORTON, HILBERT
+from repro.stencil import (make_stencil_mesh, make_distributed_step,
+                           DistributedPipeline, shard_state, unshard_state,
+                           distributed_bytes_per_step, exchange_bytes_per_step)
 from repro.kernels import ref as kref
 
 mesh = make_stencil_mesh((2, 2, 2))
@@ -93,33 +98,42 @@ for _ in range(steps):
     want = kref.gol3d_step_ref(want, g)
 want = np.asarray(want)
 
+sharding = NamedSharding(mesh, P("dx", "dy", "dz"))
 for spec in (ROW_MAJOR, MORTON, HILBERT):
-    st = np.zeros((2, 2, 2, local_M ** 3), np.float32)
-    for a in range(2):
-        for b in range(2):
-            for c in range(2):
-                loc = gcube[a*16:(a+1)*16, b*16:(b+1)*16, c*16:(c+1)*16]
-                st[a, b, c] = np.asarray(apply_ordering(jnp.asarray(loc), spec))
-    gs = jax.device_put(jnp.asarray(st), NamedSharding(mesh, P("dx","dy","dz")))
+    st = jax.device_put(shard_state(jnp.asarray(gcube), spec, (2, 2, 2)),
+                        sharding)
+    # legacy reference: one exchange per step (S=1)
     step = make_distributed_step(mesh, spec, local_M, g)
-    gs = jax.block_until_ready(step(gs))  # compile
-    # re-init (compile consumed one step)
-    gs = jax.device_put(jnp.asarray(st), NamedSharding(mesh, P("dx","dy","dz")))
+    jax.block_until_ready(step(st))  # compile
     t0 = time.perf_counter()
+    gs = st
     for _ in range(steps):
         gs = step(gs)
-    out = np.asarray(jax.block_until_ready(gs))
-    dt = (time.perf_counter() - t0) / steps
-    got = np.zeros_like(gcube)
-    for a in range(2):
-        for b in range(2):
-            for c in range(2):
-                got[a*16:(a+1)*16, b*16:(b+1)*16, c*16:(c+1)*16] = np.asarray(
-                    undo_ordering(jnp.asarray(out[a, b, c]), spec, local_M))
-    ok = np.array_equal(got, want)
-    print(f"  {spec.name:10s} 8-device x {steps} steps  {dt*1e3:6.1f} ms/step  "
-          f"matches oracle: {ok}")
+    out_seq = np.asarray(jax.block_until_ready(gs))
+    dt_seq = (time.perf_counter() - t0) / steps
+    ok = np.array_equal(np.asarray(unshard_state(jnp.asarray(out_seq), spec, GM)), want)
+    line = f"  {spec.name:10s} per-step {dt_seq*1e3:6.1f} ms/step (oracle: {ok})"
     assert ok
+    # communication-avoiding pipeline: one deep exchange per S substeps
+    for S in (2, 4):
+        pipe = DistributedPipeline(mesh=mesh, spec=spec, M=local_M, T=8,
+                                   g=g, S=S)
+        run = pipe.run_fn(steps)
+        jax.block_until_ready(run(st))  # compile
+        t0 = time.perf_counter()
+        out = np.asarray(jax.block_until_ready(run(st)))
+        dt = (time.perf_counter() - t0) / steps
+        okS = np.array_equal(out, out_seq)  # bit-identical to S=1 reference
+        line += f"  S={S} {dt*1e3:6.1f} ms/step (bit-identical: {okS})"
+        assert okS
+    print(line)
+
+b1 = distributed_bytes_per_step(local_M, 8, g, steps, S=1)
+b4 = distributed_bytes_per_step(local_M, 8, g, steps, S=4)
+print(f"  modelled bytes/step/shard (HBM+ICI): S=1 {b1/1e3:.0f} KB -> "
+      f"S=4 {b4/1e3:.0f} KB (x{b1/b4:.2f}; ICI "
+      f"{exchange_bytes_per_step(local_M, g, 1)/1e3:.0f} -> "
+      f"{exchange_bytes_per_step(local_M, g, 4)/1e3:.0f} KB/step)")
 print("distributed gol3d OK")
 """
 

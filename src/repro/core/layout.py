@@ -23,6 +23,7 @@ from .orderings import OrderingSpec, path_to_rmo, rmo_to_path, _check_pow2, _fla
 __all__ = [
     "apply_ordering", "undo_ordering", "device_constant",
     "block_order", "blockize", "unblockize", "blockize_with_halo",
+    "store_spec",
 ]
 
 
@@ -124,6 +125,20 @@ def _block_perm_device(kind: str, nt: int, inverse: bool):
     """Cached device copy of the block permutation (path↔linear), int32."""
     return device_constant(("blockperm", kind, nt, inverse),
                            lambda: _block_perm(kind, nt, inverse))
+
+
+def store_spec(kind: str, T: int) -> OrderingSpec:
+    """The element ordering realised by the ``(nb, T, T, T)`` block store.
+
+    ``blockize(x, T, kind).ravel()`` equals
+    ``apply_ordering(x, store_spec(kind, T))`` exactly: blocks follow the
+    ``kind`` curve, elements inside a block are row-major — i.e. the
+    TPU-native store *is* a hybrid ordering (paper §2.3). This identity
+    is what lets the surface machinery (core/surfaces.py, ops.pack_surface)
+    pack halo faces straight out of the resident store: the store is just
+    path-ordered state under this spec.
+    """
+    return OrderingSpec("hybrid", tile=T, outer=kind, inner="row_major")
 
 
 def blockize(x: jnp.ndarray, T: int, kind: str = "morton") -> jnp.ndarray:

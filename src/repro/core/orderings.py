@@ -107,6 +107,10 @@ def _flat_index(kind: str, k, i, j, M: int) -> np.ndarray:
     k = np.asarray(k, dtype=np.uint64)
     i = np.asarray(i, dtype=np.uint64)
     j = np.asarray(j, dtype=np.uint64)
+    if M == 1:  # single-cell grid: every ordering is trivial (and the
+        if kind not in ("row_major", "column_major", "morton", "hilbert"):
+            raise ValueError(f"unknown simple ordering {kind!r}")
+        return k * i * j  # hilbert codec rejects bit-width 0)
     MM = np.uint64(M)
     if kind == "row_major":
         return (k * MM + i) * MM + j

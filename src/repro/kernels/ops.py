@@ -130,6 +130,12 @@ def pack_surface(data_path: jnp.ndarray, spec: OrderingSpec, M: int, g: int,
     ``data_path`` is the (M³,) cube in ``spec`` order (apply_ordering).
     Buffer order is curve-visit order p_t (paper §3.2). The row plan is
     cached on (spec, M, g, face, line) across calls.
+
+    ``g`` is the face *width* — the communication-avoiding distributed
+    pipeline packs deep faces of width S·g (one exchange funds S fused
+    substeps, stencil/halo.py), and packs them straight from the resident
+    block store by passing ``layout.store_spec(kind, T)`` as the spec
+    (the store is path-ordered state under that hybrid ordering).
     """
     idx = surface_path_indices(spec, M, g, face)
     return sfc_gather_take(data_path, idx, line=line, use_kernel=use_kernel,

@@ -36,7 +36,9 @@ def assemble_halo_ref(store: jnp.ndarray, nbr: jnp.ndarray, g: int) -> jnp.ndarr
     """Resident halo assembly: gather each block's (T+2g)³ window from the
     un-haloed curve-ordered store via the SFC neighbour table.
 
-    store: (nb, T, T, T); nbr: (nb, 27) full table (core.neighbors);
+    store: (nb_src, T, T, T); nbr: (nb, 27) full table (core.neighbors),
+    nb ≤ nb_src — the distributed extended store appends shell blocks
+    after the core, so the table may index more blocks than it has rows;
     returns (nb, T+2g, T+2g, T+2g). With the periodic table of the same
     ordering this is bit-identical to layout.blockize_with_halo — the
     jnp oracle of the in-kernel assembly in stencil3d.stencil_sum_resident.
@@ -44,6 +46,7 @@ def assemble_halo_ref(store: jnp.ndarray, nbr: jnp.ndarray, g: int) -> jnp.ndarr
     T = store.shape[1]
     assert g <= T, (g, T)
     nbr = jnp.asarray(nbr)
+    own = store if store.shape[0] == nbr.shape[0] else store[:nbr.shape[0]]
     spans = (slice(T - g, T), slice(None), slice(0, g))  # lo, mid, hi
     slabs = []
     for a in range(3):
@@ -52,7 +55,7 @@ def assemble_halo_ref(store: jnp.ndarray, nbr: jnp.ndarray, g: int) -> jnp.ndarr
             parts = []
             for c in range(3):
                 col = a * 9 + b * 3 + c
-                src = store if col == 13 else store[nbr[:, col]]
+                src = own if col == 13 else store[nbr[:, col]]
                 parts.append(src[:, spans[a], spans[b], spans[c]])
             planes.append(jnp.concatenate(parts, axis=3))
         slabs.append(jnp.concatenate(planes, axis=2))
@@ -74,7 +77,9 @@ def stencil_fused_ref(store: jnp.ndarray, weights: jnp.ndarray,
     Assembles the wide (T+2·S·g)³ window once, then runs S substeps of
     tap-sum + rule with the window shrinking by g per side — the exact
     computation the fused kernel performs in VMEM, vectorised over nb.
-    Bit-identical (f32 stores) to S sequential resident steps.
+    Bit-identical (f32 stores) to S sequential resident steps. Accepts
+    the distributed extended store (shell blocks appended after the
+    core, nbr rows = core only) like the kernel does.
     """
     g = (weights.shape[0] - 1) // 2
     r = get_rule(rule)

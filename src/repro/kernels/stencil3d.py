@@ -238,12 +238,17 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
                        interpret: bool = True) -> jnp.ndarray:
     """S fused timesteps over the resident store, one HBM round-trip.
 
-    store:   (nb, T, T, T) — SFC-ordered, no halo duplication, persists
-             across launches (stencil/pipeline.ResidentPipeline)
+    store:   (nb_src, T, T, T) — SFC-ordered, no halo duplication,
+             persists across launches (stencil/pipeline.ResidentPipeline).
+             May hold *more* blocks than the grid computes: the
+             distributed pipeline appends exchanged shell blocks after
+             the core store (core/neighbors.extended_neighbor_table) and
+             the kernel only writes the nbr-indexed core.
     weights: (2g+1, 2g+1, 2g+1) tap weights (ops.uniform_weights for the
              classic neighbour-count rules)
-    nbr:     (nb, 27) int32 periodic neighbour table (core.neighbors),
-             scalar-prefetched
+    nbr:     (nb, 27) int32 neighbour table (core.neighbors, periodic or
+             extended), scalar-prefetched; nb ≤ nb_src, and column
+             SELF_COL must be the row index (both builders guarantee it)
     g:       stencil radius; S: substeps per launch; rule: kernels/rules.py
              registry key ("gol" | "jacobi" | "identity")
     returns: (nb, T, T, T) in store dtype — bit-identical (for f32
@@ -255,11 +260,12 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
     in f32; non-f32 stores would round once per launch instead of once
     per step, so bit-identity to the sequential path is f32-only.
     """
-    nb, T = store.shape[0], store.shape[1]
+    nb_src, T = store.shape[0], store.shape[1]
     s = 2 * g + 1
-    assert store.shape == (nb, T, T, T), store.shape
+    assert store.shape == (nb_src, T, T, T), store.shape
     assert weights.shape == (s, s, s), (weights.shape, s)
-    assert nbr.shape == (nb, 27), nbr.shape
+    nb = nbr.shape[0]
+    assert nbr.shape == (nb, 27) and nb <= nb_src, (nbr.shape, store.shape)
     h = S * g
     if S < 1 or h > T or T % h:
         raise ValueError(

@@ -28,11 +28,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import OrderingSpec, ROW_MAJOR, apply_ordering, undo_ordering
-from repro.core.neighbors import block_kind_of
 from repro.kernels import ops
 from repro.kernels import ref as kref
 
-from .pipeline import ResidentPipeline
+from .domain import Decomposition3D, STENCIL_AXES
+from .halo import stencil_block_kind
+from .pipeline import DistributedPipeline, ResidentPipeline
 
 __all__ = ["Gol3dConfig", "Gol3d"]
 
@@ -68,8 +69,7 @@ class Gol3d:
         """Block-grid curve for the kernel pipelines: the ordering's own
         curve when it has one, else Morton (the pipeline is SFC-blocked
         even when the logical state ordering is row/column-major)."""
-        kind = block_kind_of(self.cfg.ordering)
-        return kind if kind in ("morton", "hilbert") else "morton"
+        return stencil_block_kind(self.cfg.ordering)
 
     def step_fn(self):
         """jit-able (state_path -> state_path) single update (repack mode)."""
@@ -114,6 +114,35 @@ class Gol3d:
         pipe = self.resident_pipeline()
         cube = pipe.run(self.cube, n_steps)
         self.state_path = jax.block_until_ready(apply_ordering(cube, self.cfg.ordering))
+        return self.state_path
+
+    def distributed_pipeline(self, mesh: jax.sharding.Mesh) -> DistributedPipeline:
+        """Communication-avoiding mesh pipeline over this app's layout.
+
+        Decomposes the cfg.M cube onto ``mesh`` (cubic power-of-2 local
+        blocks, Decomposition3D), threads ``cfg.substeps`` through as the
+        exchange depth S (``substeps=0`` delegates (T, S) to the
+        exchange-aware ``DistributedPipeline.plan``).
+        """
+        cfg = self.cfg
+        procs = tuple(mesh.shape[a] for a in STENCIL_AXES)
+        local = Decomposition3D(cfg.M, procs).check_local_pow2_cube()
+        if cfg.substeps == 0:
+            return DistributedPipeline.plan(mesh, cfg.ordering, local,
+                                            g=cfg.g, use_kernel=cfg.use_kernel)
+        T = min(cfg.block_T, local)
+        return DistributedPipeline(mesh=mesh, spec=cfg.ordering, M=local,
+                                   T=T, g=cfg.g, S=cfg.substeps,
+                                   use_kernel=cfg.use_kernel)
+
+    def run_distributed(self, mesh: jax.sharding.Mesh, n_steps: int) -> jnp.ndarray:
+        """Shard the cube over the mesh, run K deep-exchange rounds, and
+        gather back into this app's path-ordered state. Bit-identical to
+        ``run``/``run_resident`` on one device (same rule, f32 state)."""
+        pipe = self.distributed_pipeline(mesh)
+        cube = pipe.run_cube(self.cube, n_steps)
+        self.state_path = jax.block_until_ready(
+            apply_ordering(cube, self.cfg.ordering))
         return self.state_path
 
     def reference_run(self, n_steps: int) -> jnp.ndarray:

@@ -1,12 +1,22 @@
 """Distributed halo exchange with SFC pack/unpack (paper §3.2/§4, on mesh).
 
-The paper's halo pattern — pack six width-g faces into contiguous buffers,
-exchange with neighbours, unpack — mapped to JAX: ``shard_map`` over a 3D
-device mesh, ``jax.lax.ppermute`` ring shifts per axis. The slab-axis
-(k) faces are packed straight from the shard's *path-ordered* storage via
-the precomputed index lists (kernels.ops.pack_surface) — the paper's
-mechanism; the remaining axes pack slices of the progressively extended
-cube (the standard corner-correct axis-sequential scheme).
+The paper's halo pattern — pack faces into contiguous buffers via
+precomputed index lists, exchange with neighbours, unpack — mapped to
+JAX: ``shard_map`` over a 3D device mesh, ``jax.lax.ppermute`` ring
+shifts per axis (axis-sequential, corner-correct).
+
+Communication-avoiding form (DESIGN.md §7): each shard keeps its state
+as the resident curve-ordered ``(nb, T, T, T)`` block store for the
+whole K-step loop — the store *is* path-ordered state under the hybrid
+ordering ``layout.store_spec(kind, T)``, so every face (not just the
+slab axis) packs straight from storage via ``ops.pack_surface``. One
+exchange moves *deep* faces of width ``h = S·g`` and funds S fused
+substeps (same window-shrink math as ``stencil_step_fused``): the
+received shell scatters into shell blocks appended after the core store
+(core/neighbors.extended_neighbor_table addresses them), and the fused
+kernel — or its jnp oracle — advances S whole timesteps per HBM
+round-trip with no per-step ``undo_ordering``/``apply_ordering`` and no
+canonical-cube materialisation, ever.
 
 On a TPU torus with Hilbert device ordering (launch/mesh.py) the six
 ppermutes are single-hop ICI transfers.
@@ -22,16 +32,22 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import OrderingSpec, apply_ordering, undo_ordering
+from repro.core import OrderingSpec, path_to_rmo, rmo_to_path
 from repro.core.cache_model import face_mask
-from repro.core.neighbors import ring_perms
-from repro.core.surfaces import surface_path_indices
+from repro.core.layout import device_constant, store_spec
+from repro.core.neighbors import (block_kind_of, extended_neighbor_table_device,
+                                  ring_perms, shell_block_count)
+from repro.core.surfaces import shell_slab_positions, shell_slab_shapes
 from repro.kernels import ops
 from repro.kernels import ref as kref
+from repro.kernels.ops import uniform_weights
+from repro.kernels.stencil3d import stencil_step_fused
 
 from .domain import STENCIL_AXES
 
-__all__ = ["surface_slab_scatter", "halo_exchange_local", "make_distributed_step"]
+__all__ = ["surface_slab_scatter", "exchange_shell", "shard_substeps",
+           "make_distributed_step", "stencil_block_kind",
+           "shard_state", "unshard_state"]
 
 
 @functools.lru_cache(maxsize=256)
@@ -39,12 +55,11 @@ def surface_slab_scatter(spec: OrderingSpec, M: int, g: int, face: str) -> np.nd
     """Positions mapping a path-ordered face buffer into its (g,M,M)-like slab.
 
     ``slab.ravel()[pos[t]] = buf[t]`` reconstructs the face in canonical
-    (row-major, face-local) layout. Works for any of the six faces; the
-    slab spans the face's two free axes plus the g-width axis, in (k,i,j)
-    order with the face axis collapsed to width g.
+    (row-major, face-local) layout. Works for any of the six faces and
+    any width ``g`` (the deep exchange passes h = S·g); the slab spans
+    the face's two free axes plus the g-width axis, in (k,i,j) order with
+    the face axis collapsed to width g.
     """
-    from repro.core.orderings import path_to_rmo
-
     q = path_to_rmo(spec, M)
     mask = face_mask(face, M, g)
     # rmo indices of face points, in path order (matches pack order)
@@ -66,74 +81,218 @@ def surface_slab_scatter(spec: OrderingSpec, M: int, g: int, face: str) -> np.nd
     return pos
 
 
-# neighbour conventions (ring partners) are shared with the block tables
-_ring_perms = ring_perms
+def stencil_block_kind(spec: OrderingSpec) -> str:
+    """Block-grid curve the stencil pipelines use for an element ordering:
+    the ordering's own curve when it has one, else Morton (the pipelines
+    are SFC-blocked even when the logical state ordering is row-major)."""
+    kind = block_kind_of(spec)
+    return kind if kind in ("morton", "hilbert") else "morton"
 
 
-def _exchange_axis_slices(x: jnp.ndarray, axis_name: str, axis: int, g: int):
-    """Corner-correct ring exchange along one axis via slicing."""
-    n = jax.lax.psum(1, axis_name)
-    fwd, bwd = _ring_perms(n)
-    size = x.shape[axis]
-    lo = jax.lax.slice_in_dim(x, 0, g, axis=axis)
-    hi = jax.lax.slice_in_dim(x, size - g, size, axis=axis)
-    recv_lo = jax.lax.ppermute(hi, axis_name, fwd)  # prev's high face
-    recv_hi = jax.lax.ppermute(lo, axis_name, bwd)  # next's low face
-    return jnp.concatenate([recv_lo, x, recv_hi], axis=axis)
+def _slab_scatter_device(spec: OrderingSpec, M: int, h: int, face: str):
+    return device_constant(("slabscatter", spec, M, h, face),
+                           lambda: surface_slab_scatter(spec, M, h, face))
 
 
-def halo_exchange_local(state_path: jnp.ndarray, spec: OrderingSpec, M: int,
-                        g: int, axis_names=STENCIL_AXES) -> jnp.ndarray:
-    """Shard-local: path-ordered (M³,) state -> halo-extended (M+2g)³ cube.
+def _pack_to_slab(store_flat, hspec, M, h, face, shape):
+    """Pack one deep face from the store, in canonical slab layout."""
+    buf = ops.pack_surface(store_flat, hspec, M, h, face)
+    pos = _slab_scatter_device(hspec, M, h, face)
+    return jnp.zeros(h * M * M, buf.dtype).at[pos].set(buf).reshape(shape)
 
-    Axis 0 (slabs) uses the paper's list-based pack from the ordering;
-    axes 1–2 extend the already-halo'd cube (corner-correct).
+
+def _unpack_recv(buf, hspec, M, h, face, shape):
+    """Scatter a received deep-face buffer (sender's pack order) into the
+    canonical slab — sender and receiver share the index lists, so the
+    receiver knows the order the remote pack produced."""
+    pos = _slab_scatter_device(hspec, M, h, face)
+    return jnp.zeros(h * M * M, buf.dtype).at[pos].set(buf).reshape(shape)
+
+
+def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
+                   h: int, axis_names=STENCIL_AXES):
+    """Deep (width-h) corner-correct shell exchange from the block store.
+
+    ``store_flat`` is the shard's ``(nb·T³,)`` ravelled curve-ordered
+    block store — path-ordered state under ``store_spec(kind, T)``, so
+    *all six* faces pack via the paper's precomputed index lists
+    (ops.pack_surface), none from a materialised cube. Axis-sequential
+    scheme: the k faces are the bare M² surfaces; the i faces carry the
+    k-received edges; the j faces carry both — after three ppermute
+    rounds the six returned slabs tile the shell of the (M+2h)³ extended
+    domain exactly (shapes: core/surfaces.shell_slab_shapes).
+
+    Per-axis ICI volume is 2h·M², 2h·(M+2h)·M, 2h·(M+2h)² items — the
+    ``exchange_items_per_exchange`` model in stencil/pipeline.py.
     """
-    # --- paper-faithful pack of the k faces from the path-ordered state
-    buf_k0 = ops.pack_surface(state_path, spec, M, g, "k0")
-    buf_k1 = ops.pack_surface(state_path, spec, M, g, "k1")
-    nx = jax.lax.psum(1, axis_names[0])
-    fwd, bwd = _ring_perms(nx)
-    recv_lo = jax.lax.ppermute(buf_k1, axis_names[0], fwd)
-    recv_hi = jax.lax.ppermute(buf_k0, axis_names[0], bwd)
-    # unpack buffers (path order) into canonical (g,M,M) slabs
-    pos0 = jnp.asarray(surface_slab_scatter(spec, M, g, "k1"))  # lo halo = prev k1
-    pos1 = jnp.asarray(surface_slab_scatter(spec, M, g, "k0"))  # hi halo = next k0
-    slab_lo = jnp.zeros(g * M * M, state_path.dtype).at[pos0].set(recv_lo).reshape(g, M, M)
-    slab_hi = jnp.zeros(g * M * M, state_path.dtype).at[pos1].set(recv_hi).reshape(g, M, M)
-    cube = undo_ordering(state_path, spec, M)
-    ext = jnp.concatenate([slab_lo, cube, slab_hi], axis=0)  # (M+2g, M, M)
-    # --- remaining axes: slice-based, corner-correct
-    ext = _exchange_axis_slices(ext, axis_names[1], 1, g)
-    ext = _exchange_axis_slices(ext, axis_names[2], 2, g)
-    return ext
+    hspec = store_spec(kind, T)
+    shp_k, _, shp_i, _, shp_j, _ = shell_slab_shapes(M, h)
+
+    # --- k axis: pack the deep slab faces, ring-shift, unpack
+    buf_k0 = ops.pack_surface(store_flat, hspec, M, h, "k0")
+    buf_k1 = ops.pack_surface(store_flat, hspec, M, h, "k1")
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[0]))
+    recv_lo = jax.lax.ppermute(buf_k1, axis_names[0], fwd)  # prev's high face
+    recv_hi = jax.lax.ppermute(buf_k0, axis_names[0], bwd)  # next's low face
+    slab_k_lo = _unpack_recv(recv_lo, hspec, M, h, "k1", shp_k)
+    slab_k_hi = _unpack_recv(recv_hi, hspec, M, h, "k0", shp_k)
+
+    # --- i axis: core faces + k-received edges (corner-correct)
+    my_i0 = _pack_to_slab(store_flat, hspec, M, h, "i0", (M, h, M))
+    my_i1 = _pack_to_slab(store_flat, hspec, M, h, "i1", (M, h, M))
+    face_i0 = jnp.concatenate(
+        [slab_k_lo[:, :h, :], my_i0, slab_k_hi[:, :h, :]], axis=0)
+    face_i1 = jnp.concatenate(
+        [slab_k_lo[:, M - h:, :], my_i1, slab_k_hi[:, M - h:, :]], axis=0)
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[1]))
+    slab_i_lo = jax.lax.ppermute(face_i1, axis_names[1], fwd)
+    slab_i_hi = jax.lax.ppermute(face_i0, axis_names[1], bwd)
+    assert slab_i_lo.shape == shp_i, (slab_i_lo.shape, shp_i)
+
+    # --- j axis: core faces + both received edge sets
+    my_j0 = _pack_to_slab(store_flat, hspec, M, h, "j0", (M, M, h))
+    my_j1 = _pack_to_slab(store_flat, hspec, M, h, "j1", (M, M, h))
+
+    def _j_face(mine, sl):
+        mid = jnp.concatenate(
+            [slab_k_lo[:, :, sl], mine, slab_k_hi[:, :, sl]], axis=0)
+        return jnp.concatenate(
+            [slab_i_lo[:, :, sl], mid, slab_i_hi[:, :, sl]], axis=1)
+
+    face_j0 = _j_face(my_j0, slice(0, h))
+    face_j1 = _j_face(my_j1, slice(M - h, M))
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[2]))
+    slab_j_lo = jax.lax.ppermute(face_j1, axis_names[2], fwd)
+    slab_j_hi = jax.lax.ppermute(face_j0, axis_names[2], bwd)
+    assert slab_j_lo.shape == shp_j, (slab_j_lo.shape, shp_j)
+
+    return slab_k_lo, slab_k_hi, slab_i_lo, slab_i_hi, slab_j_lo, slab_j_hi
+
+
+def _shell_positions_device(nt: int, T: int, h: int):
+    return device_constant(("shellpos", nt, T, h),
+                           lambda: shell_slab_positions(nt, T, h))
+
+
+def shard_substeps(store: jnp.ndarray, *, kind: str, M: int, g: int, S: int,
+                   rule: str = "gol", use_kernel: bool = False,
+                   interpret: bool = True, axis_names=STENCIL_AXES) -> jnp.ndarray:
+    """One deep exchange + S fused substeps on the resident shard store.
+
+    store: (nb, T, T, T) curve-ordered local block store (shard_map body).
+    Exchanges width S·g once, scatters the shell into shell blocks
+    appended after the core, and runs S whole timesteps through
+    ``stencil_step_fused`` (or its jnp oracle) with the extended
+    neighbour table — the distributed counterpart of one
+    ResidentPipeline launch. S sequential S=1 calls are bit-identical
+    (f32) to one S-deep call, same argument as the fused kernel.
+    """
+    nb, T = store.shape[0], store.shape[1]
+    nt = M // T
+    assert nb == nt ** 3, (store.shape, M)
+    h = S * g
+    slabs = exchange_shell(store.reshape(-1), kind, M, T, h, axis_names)
+    vals = jnp.concatenate([s.reshape(-1) for s in slabs])
+    pos = _shell_positions_device(nt, T, h)
+    shell = jnp.zeros((shell_block_count(nt) * T ** 3,), store.dtype
+                      ).at[pos].set(vals).reshape(-1, T, T, T)
+    ext = jnp.concatenate([store, shell], axis=0)
+    nbr = extended_neighbor_table_device(kind, nt)
+    w = uniform_weights(g)
+    if use_kernel:
+        return stencil_step_fused(ext, w, nbr, g=g, S=S, rule=rule,
+                                  interpret=interpret)
+    return kref.stencil_fused_ref(ext, w, nbr, S=S, rule=rule)
+
+
+def _store_perm(spec: OrderingSpec, kind: str, T: int, M: int,
+                inverse: bool) -> np.ndarray:
+    """Permutation between spec-path-ordered state and the block store.
+
+    Forward: ``store_flat = state_path[perm]``; inverse:
+    ``state_path = store_flat[perm_inv]``. Composition of the two
+    orderings' permutations — applied once per K-step run (the layout
+    boundary), never per step.
+    """
+    hspec = store_spec(kind, T)
+    if inverse:
+        return rmo_to_path(hspec, M)[path_to_rmo(spec, M)]
+    return rmo_to_path(spec, M)[path_to_rmo(hspec, M)]
+
+
+def _store_perm_device(spec: OrderingSpec, kind: str, T: int, M: int,
+                       inverse: bool):
+    return device_constant(("storeperm", spec, kind, T, M, inverse),
+                           lambda: _store_perm(spec, kind, T, M, inverse))
 
 
 def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
-                          local_M: int, g: int):
-    """jit'd distributed gol3d step on a sharded (P·M)³ global state.
+                          local_M: int, g: int, *, T: int | None = None,
+                          rule: str = "gol", use_kernel: bool = False,
+                          interpret: bool = True):
+    """jit'd distributed stencil step on a sharded (P·M)³ global state.
 
-    Global state layout: (px·M³, py, pz) is awkward; we use the flat form
-    (px, py, pz, M³) — device (a,b,c) owns row [a,b,c] holding its local
-    path-ordered state. Returns step(global_state) -> global_state.
+    Global state layout: (px, py, pz, M³) — device (a,b,c) owns row
+    [a,b,c] holding its local path-ordered state under ``spec``
+    (see :func:`shard_state`). Returns step(global_state) -> global_state.
+
+    The legacy per-step reference for DistributedPipeline (which runs the
+    same :func:`shard_substeps` round at depth S): no per-step full-cube
+    repack — the state converts to the block store and back (one
+    permutation gather each way), all six faces pack from the store via
+    the index lists, and the compute is the fused S=1 path. Bit-identical
+    to the pipeline at every S (f32), and to the pre-rebuild slice-loop
+    reference for integer-valued rules (gol).
     """
+    if T is None:
+        T = min(8, local_M)
     pspec = P(*STENCIL_AXES)
+    kind = stencil_block_kind(spec)
+    nt = local_M // T
 
     def local_step(state_path):  # (1,1,1,M³) per device
         s = state_path.reshape(-1)
-        ext = halo_exchange_local(s, spec, local_M, g, STENCIL_AXES)
-        # neighbour-sum stencil on the extended cube
-        stot = 2 * g + 1
-        acc = jnp.zeros((local_M,) * 3, jnp.float32)
-        for dk in range(stot):
-            for di in range(stot):
-                for dj in range(stot):
-                    acc = acc + ext[dk:dk + local_M, di:di + local_M,
-                                    dj:dj + local_M].astype(jnp.float32)
-        cube = ext[g:g + local_M, g:g + local_M, g:g + local_M]
-        neigh = acc - cube.astype(jnp.float32)
-        nxt = kref.gol_rule_ref(cube, neigh, g)
-        return apply_ordering(nxt, spec).reshape(1, 1, 1, -1)
+        store = s[_store_perm_device(spec, kind, T, local_M, False)]
+        store = shard_substeps(store.reshape(nt ** 3, T, T, T), kind=kind,
+                               M=local_M, g=g, S=1, rule=rule,
+                               use_kernel=use_kernel, interpret=interpret)
+        out = store.reshape(-1)[_store_perm_device(spec, kind, T, local_M, True)]
+        return out.reshape(1, 1, 1, -1)
 
-    step = shard_map(local_step, mesh=mesh, in_specs=pspec, out_specs=pspec)
+    # check_rep=False: pallas_call has no shard_map replication rule yet
+    step = shard_map(local_step, mesh=mesh, in_specs=pspec, out_specs=pspec,
+                     check_rep=False)
     return jax.jit(step)
+
+
+# ----------------------------------------------------------------------
+# Global-state layout helpers (tests, demos, Gol3d.run_distributed)
+# ----------------------------------------------------------------------
+
+def shard_state(cube: jnp.ndarray, spec: OrderingSpec,
+                procs: tuple[int, int, int]) -> jnp.ndarray:
+    """(GM,GM,GM) canonical cube -> (px,py,pz,M³) per-shard path state."""
+    from repro.core.layout import _perm_device
+
+    px, py, pz = procs
+    GM = cube.shape[0]
+    assert GM % px == 0 and GM % py == 0 and GM % pz == 0, (GM, procs)
+    lk, li, lj = GM // px, GM // py, GM // pz
+    assert lk == li == lj, "local block must be cubic"
+    parts = cube.reshape(px, lk, py, li, pz, lj).transpose(0, 2, 4, 1, 3, 5)
+    q = _perm_device(spec, lk, False)  # path pos -> rmo (apply_ordering)
+    return jnp.take(parts.reshape(px, py, pz, -1), q, axis=-1)
+
+
+def unshard_state(state: jnp.ndarray, spec: OrderingSpec,
+                  global_M: int) -> jnp.ndarray:
+    """Inverse of :func:`shard_state`."""
+    from repro.core.layout import _perm_device
+
+    px, py, pz = state.shape[:3]
+    lk = round(state.shape[3] ** (1 / 3))
+    lk = next(m for m in (lk - 1, lk, lk + 1) if m ** 3 == state.shape[3])
+    p = _perm_device(spec, lk, True)  # rmo -> path pos (undo_ordering)
+    parts = jnp.take(state, p, axis=-1).reshape(px, py, pz, lk, lk, lk)
+    return parts.transpose(0, 3, 1, 4, 2, 5).reshape(global_M, global_M,
+                                                     global_M)

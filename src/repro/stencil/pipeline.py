@@ -30,23 +30,33 @@ benchmarks/kernel_bench.py (asserted consistent in tests).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
 from repro.core.layout import blockize, unblockize
 from repro.core.neighbors import neighbor_table_device
+from repro.core.orderings import OrderingSpec
 from repro.kernels import ref as kref
 from repro.kernels.ops import uniform_weights
 from repro.kernels.rules import get_rule
 from repro.kernels.stencil3d import stencil_step_fused
 
+from .domain import STENCIL_AXES
+from .halo import (shard_substeps, shard_state, stencil_block_kind,
+                   unshard_state, _store_perm_device)
+
 __all__ = [
-    "ResidentPipeline", "VMEM_BUDGET_BYTES", "fused_vmem_bytes",
+    "ResidentPipeline", "DistributedPipeline", "VMEM_BUDGET_BYTES",
+    "fused_vmem_bytes",
     "repack_items_per_step", "repack_bytes_per_step",
     "fused_items_per_launch", "resident_bytes_per_step",
     "resident_unfused_items_per_step", "resident_unfused_bytes_per_step",
+    "exchange_items_per_exchange", "exchange_bytes_per_step",
+    "distributed_bytes_per_step",
 ]
 
 # Conservative per-core VMEM working-set budget the autotuner plans
@@ -115,26 +125,10 @@ class ResidentPipeline:
         search, not "largest S that fits". Ties break toward smaller
         windows.
         """
-        best = None
-        T = 1
-        while T <= M:
-            if M % T == 0 and T % g == 0:
-                S = 1
-                while S <= max_S:
-                    h = S * g
-                    if h <= T and T % h == 0:
-                        vm = fused_vmem_bytes(T, g, S, itemsize)
-                        if vm <= vmem_limit:
-                            cost = resident_bytes_per_step(
-                                M, T, g, n_steps, itemsize, S=S)
-                            if best is None or (cost, vm) < best[0]:
-                                best = ((cost, vm), T, S)
-                    S *= 2
-            T *= 2
-        if best is None:
-            raise ValueError(
-                f"no (T, S) fits vmem_limit={vmem_limit} for M={M}, g={g}")
-        _, T, S = best
+        T, S = _plan_search(
+            M, g, max_S, vmem_limit, itemsize,
+            lambda T, S: resident_bytes_per_step(M, T, g, n_steps,
+                                                 itemsize, S=S))
         return cls(M=M, T=T, g=g, kind=kind, S=S, rule=rule,
                    use_kernel=use_kernel, interpret=interpret)
 
@@ -209,6 +203,32 @@ class ResidentPipeline:
 
     def vmem_bytes(self, itemsize: int = 4) -> int:
         return fused_vmem_bytes(self.T, self.g, self.S, itemsize)
+
+
+def _plan_search(M: int, g: int, max_S: int, vmem_limit: int, itemsize: int,
+                 cost_fn) -> tuple[int, int]:
+    """Enumerate valid power-of-two (T, S) under the VMEM budget and pick
+    the ``cost_fn(T, S)``-cheapest pair (ties toward smaller windows) —
+    the one search behind both the resident and the distributed plan."""
+    best = None
+    T = 1
+    while T <= M:
+        if M % T == 0 and T % g == 0:
+            S = 1
+            while S <= max_S:
+                h = S * g
+                if h <= T and T % h == 0:
+                    vm = fused_vmem_bytes(T, g, S, itemsize)
+                    if vm <= vmem_limit:
+                        cost = cost_fn(T, S)
+                        if best is None or (cost, vm) < best[0]:
+                            best = ((cost, vm), T, S)
+                S *= 2
+        T *= 2
+    if best is None:
+        raise ValueError(
+            f"no (T, S) fits vmem_limit={vmem_limit} for M={M}, g={g}")
+    return best[1], best[2]
 
 
 def fused_vmem_bytes(T: int, g: int, S: int, itemsize: int = 4) -> int:
@@ -291,3 +311,174 @@ def resident_bytes_per_step(M: int, T: int, g: int, n_steps: int,
 def _boundary_items(M: int) -> int:
     # blockize + unblockize: read M³ + write M³ each, once per run
     return 4 * M ** 3
+
+
+def exchange_items_per_exchange(M: int, g: int, S: int = 1) -> int:
+    """ICI items one shard moves per deep halo exchange (h = S·g).
+
+    Axis-sequential corner-correct scheme (stencil/halo.exchange_shell):
+    the k faces are bare h·M² slabs, the i faces carry the k-received
+    edges (h·(M+2h)·M), the j faces both (h·(M+2h)²); each axis sends
+    both directions. Deep halos therefore move *slightly more* bytes in
+    total (the corner terms grow with h) — what S buys is S× fewer
+    exchanges (latency/launch amortisation) and the fused kernel's HBM
+    amortisation, the communication-avoiding trade.
+    """
+    h = S * g
+    e = M + 2 * h
+    return 2 * h * M * M + 2 * h * e * M + 2 * h * e * e
+
+
+def exchange_bytes_per_step(M: int, g: int, S: int = 1,
+                            itemsize: int = 4) -> float:
+    """Modelled ICI bytes per *timestep*: one width-S·g exchange funds S."""
+    return itemsize * exchange_items_per_exchange(M, g, S) / S
+
+
+def distributed_bytes_per_step(M: int, T: int, g: int, n_steps: int,
+                               itemsize: int = 4, *, S: int = 1) -> float:
+    """Total modelled data movement per timestep of one mesh shard:
+    HBM (fused resident model) + ICI (deep-exchange model) — the
+    single-accounting number behind the distributed benchmark rows and
+    DistributedPipeline.plan()."""
+    return (resident_bytes_per_step(M, T, g, n_steps, itemsize, S=S)
+            + exchange_bytes_per_step(M, g, S, itemsize))
+
+
+# ---------------------------------------------------------------------------
+# Communication-avoiding distributed pipeline (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DistributedPipeline:
+    """K-step distributed stencil over a mesh of resident block stores.
+
+    The communication-avoiding composition of the PR-1/PR-2 machinery
+    with the halo exchange: every shard keeps its local state as the
+    curve-ordered ``(nb, T, T, T)`` block store for the whole K-step
+    loop (one permutation gather in, one out — never per step), packs
+    *deep* width-S·g faces straight from that store via the precomputed
+    index lists, and advances S whole timesteps per exchange through the
+    fused kernel path (halo.shard_substeps). Bit-identical (f32) to S
+    sequential :func:`repro.stencil.halo.make_distributed_step` steps.
+
+    mesh:  3D device mesh over STENCIL_AXES (domain.make_stencil_mesh)
+    spec:  element ordering of the public sharded state (shard_state)
+    M:     local shard edge (power of 2); T: block edge (T | M, S·g | T)
+    g:     stencil radius; S: substeps per exchange; rule: rules.py key
+    """
+    mesh: jax.sharding.Mesh = field(compare=False)
+    spec: OrderingSpec = field(default=None)  # type: ignore[assignment]
+    M: int = 16
+    T: int = 8
+    g: int = 1
+    S: int = 1
+    rule: str = "gol"
+    use_kernel: bool = False
+    interpret: bool = True
+
+    def __post_init__(self):
+        assert self.spec is not None, "DistributedPipeline needs an OrderingSpec"
+        assert self.M % self.T == 0, (self.M, self.T)
+        if not self._valid_S(self.S):
+            raise ValueError(
+                f"distributed temporal blocking needs 1 <= S*g <= T and "
+                f"S*g | T, got T={self.T}, g={self.g}, S={self.S}")
+
+    _valid_S = ResidentPipeline._valid_S
+
+    @property
+    def kind(self) -> str:
+        return stencil_block_kind(self.spec)
+
+    @property
+    def procs(self) -> tuple[int, int, int]:
+        return tuple(self.mesh.shape[a] for a in STENCIL_AXES)
+
+    @property
+    def global_M(self) -> int:
+        px, py, pz = self.procs
+        assert px == py == pz, self.procs
+        return px * self.M
+
+    # -- autotuner ---------------------------------------------------------
+    @classmethod
+    def plan(cls, mesh, spec: OrderingSpec, M: int, g: int = 1,
+             rule: str = "gol", n_steps: int = 10, *,
+             vmem_limit: int = VMEM_BUDGET_BYTES, max_S: int = 8,
+             use_kernel: bool = False, interpret: bool = True,
+             itemsize: int = 4) -> "DistributedPipeline":
+        """Pick (T, S) minimising modelled HBM **plus ICI** bytes/step.
+
+        Same enumeration as ResidentPipeline.plan, but the cost now
+        carries the exchange term: S trades window inflation against
+        both HBM amortisation and exchange frequency (the corner terms
+        of a deep exchange grow with S·g), so the optimum can shift
+        versus the single-device plan.
+        """
+        T, S = _plan_search(
+            M, g, max_S, vmem_limit, itemsize,
+            lambda T, S: distributed_bytes_per_step(M, T, g, n_steps,
+                                                    itemsize, S=S))
+        return cls(mesh=mesh, spec=spec, M=M, T=T, g=g, S=S, rule=rule,
+                   use_kernel=use_kernel, interpret=interpret)
+
+    # -- the K-step runner -------------------------------------------------
+    def run_fn(self, n_steps: int):
+        """jit'd (px,py,pz,M³) -> same: ceil(K/S) exchange+compute rounds.
+
+        A K % S remainder runs as one shallower round when S·g-divisibility
+        allows, else step by step — mirroring ResidentPipeline.run_fn.
+        """
+        full, rem = divmod(n_steps, self.S)
+        if rem and not self._valid_S(rem):
+            tail_rounds, tail_S = rem, 1
+        else:
+            tail_rounds, tail_S = (1, rem) if rem else (0, 0)
+        pspec = P(*STENCIL_AXES)
+        spec, kind, M, T = self.spec, self.kind, self.M, self.T
+        nt = M // T
+        round_kw = dict(kind=kind, M=M, g=self.g, rule=self.rule,
+                        use_kernel=self.use_kernel, interpret=self.interpret)
+
+        def local_run(state_path):  # (1,1,1,M³) per device
+            s = state_path.reshape(-1)
+            store = s[_store_perm_device(spec, kind, T, M, False)]
+            store = store.reshape(nt ** 3, T, T, T)
+            if full:
+                store = jax.lax.fori_loop(
+                    0, full,
+                    lambda _, st: shard_substeps(st, S=self.S, **round_kw),
+                    store)
+            if tail_rounds:
+                store = jax.lax.fori_loop(
+                    0, tail_rounds,
+                    lambda _, st: shard_substeps(st, S=tail_S, **round_kw),
+                    store)
+            out = store.reshape(-1)[_store_perm_device(spec, kind, T, M, True)]
+            return out.reshape(1, 1, 1, -1)
+
+        # check_rep=False: pallas_call has no shard_map replication rule yet
+        return jax.jit(shard_map(local_run, mesh=self.mesh, in_specs=pspec,
+                                 out_specs=pspec, check_rep=False))
+
+    def run(self, state: jnp.ndarray, n_steps: int) -> jnp.ndarray:
+        """Advance a (px,py,pz,M³) sharded path-ordered state K steps."""
+        return self.run_fn(n_steps)(state)
+
+    def run_cube(self, cube: jnp.ndarray, n_steps: int) -> jnp.ndarray:
+        """Convenience: shard a canonical global cube, run, gather back."""
+        st = shard_state(cube, self.spec, self.procs)
+        st = self.run(st, n_steps)
+        return unshard_state(st, self.spec, self.global_M)
+
+    # -- modelled traffic --------------------------------------------------
+    def bytes_per_step(self, n_steps: int, itemsize: int = 4) -> float:
+        return distributed_bytes_per_step(self.M, self.T, self.g, n_steps,
+                                          itemsize, S=self.S)
+
+    def exchange_bytes_per_step(self, itemsize: int = 4) -> float:
+        return exchange_bytes_per_step(self.M, self.g, self.S, itemsize)
+
+    def vmem_bytes(self, itemsize: int = 4) -> int:
+        return fused_vmem_bytes(self.T, self.g, self.S, itemsize)

@@ -1,0 +1,52 @@
+"""benchmarks/diff.py — the perf-trajectory regression gate (satellite)."""
+
+import json
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")
+from benchmarks.diff import compare, main  # noqa: E402
+
+
+def _rows(**us):
+    return {k: {"name": k, "us_per_call": v,
+                "derived": {"fused_bytes_per_substep": 1000}}
+            for k, v in us.items()}
+
+
+def test_compare_flags_only_threshold_crossings():
+    old = _rows(a=1000.0, b=1000.0, c=10.0)
+    new = _rows(a=1300.0, b=1100.0, c=40.0)
+    reg, _ = compare(old, new, threshold=25.0, min_us=50.0, keys=[])
+    assert len(reg) == 1 and reg[0].startswith("a:")  # b under 25%, c noise
+
+
+def test_compare_floors_baseline_at_noise_floor():
+    """A sub-noise-floor row can't flag on jitter, but blowing past the
+    floored baseline by more than the threshold still registers."""
+    old = _rows(fast=10.0)
+    reg, _ = compare(old, _rows(fast=60.0), 25.0, min_us=50.0, keys=[])
+    assert not reg  # within 25% of the 50 µs floor
+    reg, _ = compare(old, _rows(fast=10000.0), 25.0, min_us=50.0, keys=[])
+    assert len(reg) == 1  # a 1000x slowdown is not noise
+
+
+def test_compare_derived_keys_and_row_churn():
+    old = _rows(a=100.0, gone=100.0)
+    new = _rows(a=100.0, fresh=100.0)
+    new["a"]["derived"]["fused_bytes_per_substep"] = 2000
+    reg, notes = compare(old, new, threshold=25.0, min_us=50.0,
+                         keys=["fused_bytes_per_substep"])
+    assert len(reg) == 1 and "fused_bytes_per_substep" in reg[0]
+    assert any("gone" in n for n in notes)  # churn reported, never fatal
+    assert any("fresh" in n for n in notes)
+
+
+@pytest.mark.parametrize("new_us,code", [(100.0, 0), (300.0, 1)])
+def test_main_exit_codes(tmp_path, new_us, code):
+    for name, us in [("old.json", 100.0), ("new.json", new_us)]:
+        (tmp_path / name).write_text(json.dumps(
+            {"git_rev": name, "rows": list(_rows(r=us).values())}))
+    assert main([str(tmp_path / "old.json"), str(tmp_path / "new.json"),
+                 "--threshold", "25"]) == code

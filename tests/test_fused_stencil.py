@@ -213,6 +213,14 @@ def test_benchmark_rows_share_accounting():
         resident_unfused_bytes_per_step(M_, T_, g, K))
     assert d["repack_bytes_per_step"] == round(repack_bytes_per_step(M_, T_, g))
     assert d["fused_vs_unfused"] >= 2.0  # the acceptance ratio, as reported
+    # distributed totals ride the same helpers (DESIGN.md §7)
+    from repro.stencil import (distributed_bytes_per_step,
+                               exchange_bytes_per_step)
+    assert d["ici_bytes_per_step"] == round(exchange_bytes_per_step(M_, g, S))
+    assert d["distributed_bytes_per_step"] == round(
+        distributed_bytes_per_step(M_, T_, g, K, S=S))
+    assert d["distributed_bytes_per_step"] == round(
+        d["fused_bytes_per_substep"] + exchange_bytes_per_step(M_, g, S))
     # items helpers and bytes helpers agree (itemsize=4)
     assert repack_bytes_per_step(M_, T_, g) == 4 * repack_items_per_step(M_, T_, g)
     assert fused_items_per_launch(M_, T_, g, 1) + 2 * (M_ // T_) ** 3 * T_ ** 3 \
