@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HILBERT, MORTON, ROW_MAJOR, apply_ordering, blockize
+from repro.core import (HILBERT, MORTON, NEUMANN0, ROW_MAJOR, apply_ordering,
+                        blockize)
 from repro.core.layout import store_spec
 from repro.core.surfaces import PAPER_SURFACE_NAMES, run_stats
 from repro.kernels.ops import pack_surface
@@ -58,6 +59,7 @@ def rows(sizes=(32, 64), widths=(1, 2)):
                             "dma_runs=" + ",".join(f"{k}:{v}"
                                                    for k, v in runs.items())))
     out += deep_rows(sizes=sizes)
+    out += clamped_exchange_rows(sizes=sizes)
     return out
 
 
@@ -98,7 +100,55 @@ def deep_rows(sizes=(32, 64), depths=(1, 2, 4), g=1, T=8):
                     f"exchange/deep_pack_M{M}_g{g}_S{S}_{kind}", dt * 1e6,
                     f"h={h}"
                     f";ici_bytes_per_exchange="
-                    f"{4 * exchange_items_per_exchange(M, g, S)}"
+                    f"{4 * exchange_items_per_exchange(M, g, S):.0f}"
                     f";ici_bytes_per_step={exchange_bytes_per_step(M, g, S):.0f}",
+                ))
+    return out
+
+
+def clamped_exchange_rows(sizes=(32, 64), depths=(1, 4), g=1, T=8,
+                          procs=(2, 2, 2)):
+    """Clamped exchange surface (DESIGN.md §8): mesh-edge shards skip the
+    wrap links, so they pack the same six faces (the packs also feed the
+    boundary fill) but *send* fewer. Timing is the six-face in-store
+    pack (identical work to the periodic row — the saving is wire-only);
+    ``derived`` carries the per-shard clamped ICI model: torus vs mesh
+    mean vs corner shard, from the one accounting helper set.
+    """
+    out = []
+    rng = np.random.default_rng(2)
+    for M in sizes:
+        cube = jnp.asarray(rng.random((M, M, M)).astype(np.float32))
+        for kind in ("morton", "hilbert"):
+            hspec = store_spec(kind, T)
+            store = blockize(cube, T, kind=kind).reshape(-1)
+            for S in depths:
+                h = S * g
+                if h > T or T % h:
+                    continue
+
+                @jax.jit
+                def pack_all(d, hspec=hspec, M=M, h=h):
+                    return [pack_surface(d, hspec, M, h, f)
+                            for pair in FACE_GROUPS for f in pair]
+
+                jax.block_until_ready(pack_all(store))  # compile
+                t0 = time.perf_counter()
+                for _ in range(N_REPS):
+                    bufs = pack_all(store)
+                jax.block_until_ready(bufs)
+                dt = (time.perf_counter() - t0) / N_REPS
+                per = 4 * exchange_items_per_exchange(M, g, S)
+                mean = 4 * exchange_items_per_exchange(
+                    M, g, S, bc=NEUMANN0, procs=procs)
+                corner = 4 * exchange_items_per_exchange(
+                    M, g, S, bc=NEUMANN0, procs=procs, coords=(0, 0, 0))
+                out.append((
+                    f"exchange/clamped_M{M}_g{g}_S{S}_{kind}", dt * 1e6,
+                    f"h={h};bc=neumann0"
+                    f";ici_bytes_per_exchange_periodic={per:.0f}"
+                    f";ici_bytes_per_exchange_clamped={mean:.0f}"
+                    f";ici_bytes_per_exchange_edge_shard={corner:.0f}"
+                    f";ici_clamped_vs_periodic={mean / per:.3f}",
                 ))
     return out

@@ -14,6 +14,12 @@ helpers (one source of truth, asserted consistent in
 tests/test_fused_stencil.py): the fused path at S=4 must model ≥ 2×
 fewer bytes/substep than the PR-1 unfused resident path, which itself
 beats repack for K ≥ 2.
+
+The ``clamped/`` rows run the same fused pipeline under the neumann0
+physical boundary (DESIGN.md §8): timing includes the per-substep ghost
+refresh, and ``derived`` adds the clamped exchange surface of a 2×2×2
+mesh shard (mean and corner) next to the periodic ICI model — the
+perf-trajectory record that edge shards exchange strictly fewer bytes.
 """
 
 from __future__ import annotations
@@ -22,13 +28,14 @@ import time
 
 import jax
 
-from repro.core import HILBERT, MORTON, ROW_MAJOR
+from repro.core import HILBERT, MORTON, NEUMANN0, ROW_MAJOR
 from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
                            distributed_bytes_per_step, exchange_bytes_per_step,
                            repack_bytes_per_step, resident_bytes_per_step,
                            resident_unfused_bytes_per_step)
 
 N_ITERS = 10
+CLAMPED_PROCS = (2, 2, 2)  # mesh shape of the modelled clamped shard rows
 
 
 def rows(sizes=(32, 64), stencils=(1, 2)):
@@ -50,6 +57,7 @@ def rows(sizes=(32, 64), stencils=(1, 2)):
                             dt * 1e6 / N_ITERS,
                             f"ns_per_item={per_item_ns:.2f}"))
     out += resident_rows(sizes=sizes, stencils=stencils)
+    out += clamped_rows(sizes=sizes)
     return out
 
 
@@ -74,6 +82,58 @@ def resident_derived(M: int, T: int, g: int, S: int, n_steps: int) -> str:
             f";fused_vs_repack={rep_b / fus_b:.3f}"
             f";ici_bytes_per_step={exc_b:.0f}"
             f";distributed_bytes_per_step={dst_b:.0f}")
+
+
+def clamped_derived(M: int, T: int, g: int, S: int, n_steps: int) -> str:
+    """Shared-accounting derived string for one clamped row.
+
+    The HBM term is boundary-independent (same fused model); the ICI
+    columns report the clamped exchange surface of a CLAMPED_PROCS mesh
+    — the mesh mean DistributedPipeline.plan(bc=...) minimises and the
+    corner shard — alongside the periodic torus volume for the ratio.
+    """
+    fus_b = resident_bytes_per_step(M, T, g, n_steps, S=S)
+    per_b = exchange_bytes_per_step(M, g, S)
+    mean_b = exchange_bytes_per_step(M, g, S, bc=NEUMANN0,
+                                     procs=CLAMPED_PROCS)
+    corner_b = exchange_bytes_per_step(M, g, S, bc=NEUMANN0,
+                                       procs=CLAMPED_PROCS,
+                                       coords=(0, 0, 0))
+    dst_b = distributed_bytes_per_step(M, T, g, n_steps, S=S, bc=NEUMANN0,
+                                       procs=CLAMPED_PROCS)
+    return (f"S={S};bc=neumann0"
+            f";fused_bytes_per_substep={fus_b:.0f}"
+            f";ici_bytes_per_step_periodic={per_b:.0f}"
+            f";ici_bytes_per_step_clamped={mean_b:.0f}"
+            f";ici_bytes_per_step_edge_shard={corner_b:.0f}"
+            f";ici_clamped_vs_periodic={mean_b / per_b:.3f}"
+            f";distributed_bytes_per_step={dst_b:.0f}")
+
+
+def clamped_rows(sizes=(32, 64), g=1, T=8, n_steps=N_ITERS):
+    """Fused resident pipeline under neumann0 boundaries (DESIGN.md §8):
+    steps/sec with the per-substep ghost refresh in the hot loop, plus
+    the clamped exchange-surface model of a CLAMPED_PROCS mesh shard."""
+    out = []
+    for M in sizes:
+        cube = Gol3d(Gol3dConfig(M=M, g=g, block_T=T)).cube
+        for S in (1, 4):
+            for kind in ("morton", "hilbert"):
+                pipe = ResidentPipeline(M=M, T=T, g=g, kind=kind, S=S,
+                                        bc=NEUMANN0)
+                run = pipe.run_fn(n_steps)
+                jax.block_until_ready(run(pipe.to_blocks(cube)))  # warm
+                store = pipe.to_blocks(cube)
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(store))
+                dt = time.perf_counter() - t0
+                out.append((
+                    f"clamped/update_M{M}_g{g}_T{T}_S{S}_{kind}",
+                    dt * 1e6 / n_steps,
+                    f"steps_per_s={n_steps / dt:.1f};"
+                    + clamped_derived(M, T, g, S, n_steps),
+                ))
+    return out
 
 
 def resident_rows(sizes=(32, 64), stencils=(1, 2), T=8, n_steps=N_ITERS):

@@ -1,0 +1,111 @@
+"""Docs build check: doctests + link + DESIGN.md §-reference validation.
+
+The docs "build" for this repo is three executable guarantees, run by
+the CI ``docs`` job and by tier-1 via tests/test_docs.py:
+
+1. **doctest** — every ``>>>`` example in ``docs/*.md`` runs
+   (``python -m doctest`` semantics via doctest.testfile), so the
+   quickstart commands and API snippets can't rot;
+2. **links** — every relative markdown link in ``docs/*.md`` and
+   ``DESIGN.md`` points at an existing file;
+3. **§-references** — every ``DESIGN.md §N`` citation anywhere in the
+   repo (docstrings cite DESIGN sections as load-bearing anchors) names
+   a section header that actually exists, so DESIGN.md cross-refs can't
+   dangle again (the PR-1 cleanup, now enforced).
+
+Run: ``PYTHONPATH=src python docs/check_docs.py`` from the repo root.
+Exits nonzero with a list of failures.
+"""
+
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOCS = REPO / "docs"
+
+# files whose prose/docstrings may cite DESIGN.md sections
+_REF_GLOBS = ("src/**/*.py", "tests/*.py", "benchmarks/*.py",
+              "examples/*.py", "docs/*.md", "*.md")
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_DESIGN_REF_RE = re.compile(
+    r"DESIGN\.md[^\S\n]*(§\w[\w-]*(?:[–-]+§\w[\w-]*)*)")
+_SECTION_TOKEN_RE = re.compile(r"§(\w[\w-]*)")
+
+
+def doc_files() -> list[Path]:
+    return sorted(DOCS.glob("*.md"))
+
+
+def design_sections() -> set[str]:
+    """Tokens of every ``## §N``-style header in DESIGN.md."""
+    out = set()
+    for line in (REPO / "DESIGN.md").read_text().splitlines():
+        m = re.match(r"^#+\s*§([\w-]+)", line.strip())
+        if m:
+            out.add(m.group(1))
+    return out
+
+
+def check_doctests() -> list[str]:
+    """Run every docs/*.md through doctest (fresh globals per file)."""
+    sys.path.insert(0, str(REPO / "src"))
+    failures = []
+    for md in doc_files():
+        res = doctest.testfile(str(md), module_relative=False, verbose=False,
+                               optionflags=doctest.NORMALIZE_WHITESPACE)
+        if res.failed:
+            failures.append(f"{md.relative_to(REPO)}: {res.failed} of "
+                            f"{res.attempted} doctest example(s) failed")
+    return failures
+
+
+def check_links() -> list[str]:
+    """Relative markdown links in docs/ + DESIGN.md must resolve."""
+    failures = []
+    for md in doc_files() + [REPO / "DESIGN.md"]:
+        for target in _LINK_RE.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                failures.append(
+                    f"{md.relative_to(REPO)}: dangling link -> {target}")
+    return failures
+
+
+def check_design_refs() -> list[str]:
+    """Every ``DESIGN.md §N`` citation must name a real section."""
+    sections = design_sections()
+    failures = []
+    for pattern in _REF_GLOBS:
+        for f in REPO.glob(pattern):
+            if not f.is_file():
+                continue
+            text = f.read_text(errors="replace")
+            for ref in _DESIGN_REF_RE.findall(text):
+                for token in _SECTION_TOKEN_RE.findall(ref):
+                    if token not in sections:
+                        failures.append(
+                            f"{f.relative_to(REPO)}: dangling reference "
+                            f"DESIGN.md §{token}")
+    return failures
+
+
+def main() -> int:
+    failures = check_links() + check_design_refs() + check_doctests()
+    if failures:
+        print(f"{len(failures)} docs failure(s):", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    n = len(doc_files())
+    print(f"docs OK: {n} files doctested, links + DESIGN.md §-refs resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

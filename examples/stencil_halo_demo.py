@@ -14,9 +14,14 @@ per-step exchange (make_distributed_step) verified against the
 single-device oracle, and the communication-avoiding DistributedPipeline
 (one deep S·g exchange per S fused substeps, DESIGN.md §7) verified
 bit-identical to the per-step form. This is the paper's parallel
-experiment (§4, second set) as a shard_map program.
+experiment (§4, second set) as a shard_map program. The same matrix
+then repeats under clamped neumann0 boundaries (DESIGN.md §8) — open
+exchange rings, shell-block boundary fill — and the modelled ICI
+savings table prints for both boundary contracts (mesh-edge shards
+skip the wrap links, so clamped shards move strictly fewer wire bytes).
 
 Run: PYTHONPATH=src python examples/stencil_halo_demo.py
+(docs/quickstart.md walks through the output.)
 """
 
 import os
@@ -82,59 +87,74 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core import ROW_MAJOR, MORTON, HILBERT
+from repro.core import ROW_MAJOR, MORTON, HILBERT, NEUMANN0, PERIODIC
 from repro.stencil import (make_stencil_mesh, make_distributed_step,
                            DistributedPipeline, shard_state, unshard_state,
                            distributed_bytes_per_step, exchange_bytes_per_step)
 from repro.kernels import ref as kref
 
 mesh = make_stencil_mesh((2, 2, 2))
+procs = (2, 2, 2)
 local_M, g, GM, steps = 16, 1, 32, 10
 rng = np.random.default_rng(0)
 gcube = (rng.random((GM, GM, GM)) < 0.35).astype(np.float32)
 
-want = jnp.asarray(gcube)
-for _ in range(steps):
-    want = kref.gol3d_step_ref(want, g)
-want = np.asarray(want)
-
 sharding = NamedSharding(mesh, P("dx", "dy", "dz"))
-for spec in (ROW_MAJOR, MORTON, HILBERT):
-    st = jax.device_put(shard_state(jnp.asarray(gcube), spec, (2, 2, 2)),
-                        sharding)
-    # legacy reference: one exchange per step (S=1)
-    step = make_distributed_step(mesh, spec, local_M, g)
-    jax.block_until_ready(step(st))  # compile
-    t0 = time.perf_counter()
-    gs = st
+for bc in (PERIODIC, NEUMANN0):
+    print(f"  --- boundaries: {bc.kind} ---")
+    want = jnp.asarray(gcube)
     for _ in range(steps):
-        gs = step(gs)
-    out_seq = np.asarray(jax.block_until_ready(gs))
-    dt_seq = (time.perf_counter() - t0) / steps
-    ok = np.array_equal(np.asarray(unshard_state(jnp.asarray(out_seq), spec, GM)), want)
-    line = f"  {spec.name:10s} per-step {dt_seq*1e3:6.1f} ms/step (oracle: {ok})"
-    assert ok
-    # communication-avoiding pipeline: one deep exchange per S substeps
-    for S in (2, 4):
-        pipe = DistributedPipeline(mesh=mesh, spec=spec, M=local_M, T=8,
-                                   g=g, S=S)
-        run = pipe.run_fn(steps)
-        jax.block_until_ready(run(st))  # compile
+        want = kref.gol3d_step_ref(want, g, bc=bc)
+    want = np.asarray(want)
+    for spec in (ROW_MAJOR, MORTON, HILBERT):
+        st = jax.device_put(shard_state(jnp.asarray(gcube), spec, (2, 2, 2)),
+                            sharding)
+        # legacy reference: one exchange per step (S=1)
+        step = make_distributed_step(mesh, spec, local_M, g, bc=bc)
+        jax.block_until_ready(step(st))  # compile
         t0 = time.perf_counter()
-        out = np.asarray(jax.block_until_ready(run(st)))
-        dt = (time.perf_counter() - t0) / steps
-        okS = np.array_equal(out, out_seq)  # bit-identical to S=1 reference
-        line += f"  S={S} {dt*1e3:6.1f} ms/step (bit-identical: {okS})"
-        assert okS
-    print(line)
+        gs = st
+        for _ in range(steps):
+            gs = step(gs)
+        out_seq = np.asarray(jax.block_until_ready(gs))
+        dt_seq = (time.perf_counter() - t0) / steps
+        ok = np.array_equal(np.asarray(unshard_state(jnp.asarray(out_seq), spec, GM)), want)
+        line = f"  {spec.name:10s} per-step {dt_seq*1e3:6.1f} ms/step (oracle: {ok})"
+        assert ok
+        # communication-avoiding pipeline: one deep exchange per S substeps
+        for S in (2, 4):
+            pipe = DistributedPipeline(mesh=mesh, spec=spec, M=local_M, T=8,
+                                       g=g, S=S, bc=bc)
+            run = pipe.run_fn(steps)
+            jax.block_until_ready(run(st))  # compile
+            t0 = time.perf_counter()
+            out = np.asarray(jax.block_until_ready(run(st)))
+            dt = (time.perf_counter() - t0) / steps
+            okS = np.array_equal(out, out_seq)  # bit-identical to S=1 reference
+            line += f"  S={S} {dt*1e3:6.1f} ms/step (bit-identical: {okS})"
+            assert okS
+        print(line)
 
+# modelled ICI savings per mesh shard: deep exchange (S) x boundary contract.
+# Periodic torus shards send both faces on every axis; clamped mesh-edge
+# shards skip the wrap links (DESIGN.md §8) - on a 2x2x2 mesh every shard
+# is a corner, so the clamped column is exactly half the torus volume.
+print("  modelled ICI bytes/step/shard (local M=16, g=1):")
+print("    S   periodic   clamped(mean)   edge-shard   clamped/periodic")
+for S in (1, 2, 4):
+    per = exchange_bytes_per_step(local_M, g, S)
+    mean = exchange_bytes_per_step(local_M, g, S, bc=NEUMANN0, procs=procs)
+    edge = exchange_bytes_per_step(local_M, g, S, bc=NEUMANN0, procs=procs,
+                                   coords=(0, 0, 0))
+    print(f"    {S}   {per/1e3:7.1f} KB {mean/1e3:10.1f} KB "
+          f"{edge/1e3:9.1f} KB   x{mean/per:.2f}")
 b1 = distributed_bytes_per_step(local_M, 8, g, steps, S=1)
 b4 = distributed_bytes_per_step(local_M, 8, g, steps, S=4)
+b4c = distributed_bytes_per_step(local_M, 8, g, steps, S=4, bc=NEUMANN0,
+                                 procs=procs)
 print(f"  modelled bytes/step/shard (HBM+ICI): S=1 {b1/1e3:.0f} KB -> "
-      f"S=4 {b4/1e3:.0f} KB (x{b1/b4:.2f}; ICI "
-      f"{exchange_bytes_per_step(local_M, g, 1)/1e3:.0f} -> "
-      f"{exchange_bytes_per_step(local_M, g, 4)/1e3:.0f} KB/step)")
-print("distributed gol3d OK")
+      f"S=4 {b4/1e3:.0f} KB (x{b1/b4:.2f}); clamped S=4 {b4c/1e3:.0f} KB")
+print("distributed gol3d OK (periodic + clamped)")
 """
 
 

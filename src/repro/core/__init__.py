@@ -22,5 +22,9 @@ from .layout import (  # noqa: F401
 )
 from .neighbors import (  # noqa: F401
     OFFSETS_FULL, OFFSETS_FACE, FACE_COLS, SELF_COL,
-    block_kind_of, neighbor_table, neighbor_table_device, ring_perms,
+    block_kind_of, boundary_face_table, neighbor_table,
+    neighbor_table_device, ring_perms,
+)
+from .boundary import (  # noqa: F401
+    BoundarySpec, PERIODIC, NEUMANN0, dirichlet, as_boundary, pad_cube,
 )

@@ -1,0 +1,88 @@
+"""Physical boundary conditions for the stencil pipelines (DESIGN.md §8).
+
+The paper's experiments — and the SEM locality study (arXiv:2104.08416)
+it builds on — run on *physical* domains whose edges do not wrap. This
+module is the one definition of that contract, shared by every pipeline
+form (repack, resident, fused, distributed) and their jnp oracles:
+
+- ``periodic``         — wrap at the domain edge (the torus default);
+- ``dirichlet(value)`` — ghost sites hold a fixed value at all times;
+- ``neumann0``         — zero normal gradient: ghost sites replicate the
+  nearest in-domain plane (clamp-copy, ``jnp.pad(mode="edge")``).
+
+A :class:`BoundarySpec` is frozen and hashable so it can ride jit static
+arguments and cache keys exactly like an ``OrderingSpec``. Everything
+downstream — the clamped neighbour tables (core/neighbors.py), the
+in-window ghost refresh (kernels/rules.apply_window_bc), the mesh-edge
+shell fill (stencil/halo.exchange_shell) and the exchange-surface
+accounting (stencil/pipeline.py) — keys off the one ``kind`` string
+defined here.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["BoundarySpec", "PERIODIC", "NEUMANN0", "dirichlet",
+           "as_boundary", "pad_cube"]
+
+_KINDS = ("periodic", "dirichlet", "neumann0")
+
+
+@dataclass(frozen=True)
+class BoundarySpec:
+    """The boundary-condition contract of one stencil run.
+
+    kind:  "periodic" | "dirichlet" | "neumann0"
+    value: the fixed ghost value for dirichlet (ignored otherwise)
+
+    ``clamped`` is the property every consumer branches on: clamped runs
+    use the non-wrapping neighbour tables, refresh ghost layers per
+    substep, and skip the wrapping ppermute links of the exchange.
+    """
+    kind: str = "periodic"
+    value: float = 0.0
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(
+                f"unknown boundary kind {self.kind!r}; known: {_KINDS}")
+
+    @property
+    def clamped(self) -> bool:
+        return self.kind != "periodic"
+
+
+PERIODIC = BoundarySpec("periodic")
+NEUMANN0 = BoundarySpec("neumann0")
+
+
+def dirichlet(value: float = 0.0) -> BoundarySpec:
+    """Fixed-value boundary: ghost sites hold ``value`` at every step."""
+    return BoundarySpec("dirichlet", float(value))
+
+
+def as_boundary(bc: "BoundarySpec | str") -> BoundarySpec:
+    """Coerce a registry-style string ("periodic" | "neumann0" |
+    "dirichlet", the latter with value 0.0) to a :class:`BoundarySpec`."""
+    if isinstance(bc, BoundarySpec):
+        return bc
+    return BoundarySpec(bc)
+
+
+def pad_cube(cube: jnp.ndarray, g: int, bc: "BoundarySpec | str") -> jnp.ndarray:
+    """Ghost-extend an (M,M,M) cube by ``g`` per side under ``bc``.
+
+    The oracle-side realisation of the contract (kernels/ref.py): wrap
+    for periodic, constant fill for dirichlet, edge replication for
+    neumann0. The corner semantics (per-axis sequential replication)
+    match ``apply_window_bc`` exactly — np.pad applies axes in order.
+    """
+    bc = as_boundary(bc)
+    if bc.kind == "periodic":
+        return jnp.pad(cube, g, mode="wrap")
+    if bc.kind == "dirichlet":
+        return jnp.pad(cube, g, constant_values=bc.value)
+    return jnp.pad(cube, g, mode="edge")

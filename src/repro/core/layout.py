@@ -162,18 +162,26 @@ def unblockize(blocks: jnp.ndarray, M: int, kind: str = "morton") -> jnp.ndarray
 
 
 def blockize_with_halo(x: jnp.ndarray, T: int, g: int, kind: str = "morton",
-                       periodic: bool = True) -> jnp.ndarray:
+                       periodic: bool = True, bc=None) -> jnp.ndarray:
     """(M,M,M) -> (nb, T+2g, T+2g, T+2g), curve-ordered, halos included.
 
     This is the pack step feeding kernels/stencil3d.py: each block carries
     its own halo so the kernel needs no neighbour communication. Halo
     duplication factor is ((T+2g)/T)³.
+
+    ``bc`` (core.boundary.BoundarySpec or kind string) selects the ghost
+    extension of the repack pipeline and overrides ``periodic`` when
+    given; the bare ``periodic=False`` legacy toggle is edge replication
+    (i.e. neumann0).
     """
+    from .boundary import NEUMANN0, PERIODIC, pad_cube
+
     M = x.shape[0]
     nt = M // T
     assert nt * T == M
-    mode = "wrap" if periodic else "edge"
-    xp = jnp.pad(x, g, mode=mode)
+    if bc is None:
+        bc = PERIODIC if periodic else NEUMANN0
+    xp = pad_cube(x, g, bc)
     bo = block_order(kind, nt)
     # static window gather: start offsets per block
     starts = bo * T  # in padded coords the halo window starts at bo*T

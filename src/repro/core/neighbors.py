@@ -28,6 +28,7 @@ from .orderings import OrderingSpec
 __all__ = [
     "OFFSETS_FULL", "OFFSETS_FACE", "FACE_COLS", "SELF_COL",
     "block_kind_of", "neighbor_table", "neighbor_table_device", "ring_perms",
+    "boundary_face_table", "boundary_face_table_device",
     "shell_block_count", "shell_block_index", "extended_neighbor_table",
     "extended_neighbor_table_device",
 ]
@@ -182,14 +183,54 @@ def extended_neighbor_table_device(spec: OrderingSpec | str,
                            lambda: extended_neighbor_table(kind, nt))
 
 
-def ring_perms(n: int) -> tuple[list[tuple[int, int]], list[tuple[int, int]]]:
-    """(forward, backward) ppermute partner lists for a periodic ring.
+def ring_perms(n: int, periodic: bool = True
+               ) -> tuple[list[tuple[int, int]], list[tuple[int, int]]]:
+    """(forward, backward) ppermute partner lists for a ring of n devices.
 
     The 1D special case of the face tables — device ``i``'s +axis
     neighbour is ``i+1 mod n`` — kept here so stencil/halo.py's exchange
     and the block tables share one source of neighbour conventions.
     (Direct formula: device meshes need not be powers of 2.)
+
+    ``periodic=False`` is the clamped-boundary ring: the wrapping pairs
+    ``(n-1, 0)`` / ``(0, n-1)`` are simply absent, so *no bytes move on
+    the wrap link* — devices with no source receive zeros (``ppermute``
+    semantics) and stencil/halo.exchange_shell substitutes boundary
+    values there instead.
     """
+    if not periodic:
+        return ([(i, i + 1) for i in range(n - 1)],
+                [(i, i - 1) for i in range(1, n)])
     fwd = [(i, (i + 1) % n) for i in range(n)]
     bwd = [(i, (i - 1) % n) for i in range(n)]
     return fwd, bwd
+
+
+@functools.lru_cache(maxsize=128)
+def boundary_face_table(spec: OrderingSpec | str, nt: int) -> np.ndarray:
+    """(nb, 6) int32 flags: which faces of each block lie on the domain edge.
+
+    Columns follow :data:`OFFSETS_FACE` order — ``[k-, k+, i-, i+, j-, j+]``
+    — so column ``2·axis + side`` matches the face the fused kernel's
+    ghost refresh (kernels/rules.apply_window_bc) masks. Row ``t`` is the
+    block the curve visits at path position ``t``, same indexing as
+    :func:`neighbor_table`. On a clamped run the resident pipeline feeds
+    this table straight to the kernel; the distributed pipeline first
+    AND-masks it with the shard's mesh position (only mesh-edge shards
+    own global domain faces — stencil/halo.shard_substeps).
+    """
+    kind = block_kind_of(spec)
+    bo = block_order(kind, nt)  # (nb, 3): path pos -> block coords
+    cols = []
+    for ax in range(3):
+        cols += [bo[:, ax] == 0, bo[:, ax] == nt - 1]
+    tab = np.stack(cols, axis=1).astype(np.int32)
+    tab.setflags(write=False)
+    return tab
+
+
+def boundary_face_table_device(spec: OrderingSpec | str, nt: int) -> jnp.ndarray:
+    """Cached device-resident copy of :func:`boundary_face_table`."""
+    kind = block_kind_of(spec)
+    return device_constant(("bndtab", kind, nt),
+                           lambda: boundary_face_table(kind, nt))

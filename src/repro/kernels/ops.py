@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.boundary import PERIODIC
 from repro.core.layout import blockize_with_halo, device_constant, unblockize
 from repro.core.orderings import OrderingSpec
 from repro.core.surfaces import surface_path_indices
@@ -49,17 +50,20 @@ def _surface_idx_device(spec: OrderingSpec, M: int, g: int, face: str):
                            lambda: surface_path_indices(spec, M, g, face))
 
 
-@functools.partial(jax.jit, static_argnames=("g", "block_kind", "T", "use_kernel", "interpret"))
+@functools.partial(jax.jit, static_argnames=("g", "block_kind", "T",
+                                             "use_kernel", "bc", "interpret"))
 def gol3d_step(cube: jnp.ndarray, *, g: int, T: int = 8,
                block_kind: str = "morton", use_kernel: bool = False,
-               interpret: bool = True) -> jnp.ndarray:
+               bc=PERIODIC, interpret: bool = True) -> jnp.ndarray:
     """One gol3d update via the SFC-blocked stencil pipeline.
 
     blockize_with_halo (SFC layout) → stencil kernel → rule → unblockize.
-    Semantically identical to ref.gol3d_step_ref (periodic boundaries).
+    Semantically identical to ref.gol3d_step_ref under the same ``bc``
+    (core.boundary contract: periodic wrap, dirichlet constant, or
+    neumann0 edge replication — the halo bake-in realises all three).
     """
     M = cube.shape[0]
-    blocks = blockize_with_halo(cube, T, g, kind=block_kind, periodic=True)
+    blocks = blockize_with_halo(cube, T, g, kind=block_kind, bc=bc)
     if use_kernel:
         neigh = stencil_sum_blocks(blocks, uniform_weights(g), g=g,
                                    interpret=interpret)

@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .rules import get_rule
+from repro.core.boundary import PERIODIC, as_boundary, pad_cube
+
+from .rules import apply_window_bc, get_rule
 
 __all__ = ["stencil_sum_ref", "gol_rule_ref", "gol3d_step_ref",
            "assemble_halo_ref", "stencil_sum_resident_ref",
@@ -70,8 +72,8 @@ def stencil_sum_resident_ref(store: jnp.ndarray, weights: jnp.ndarray,
 
 
 def stencil_fused_ref(store: jnp.ndarray, weights: jnp.ndarray,
-                      nbr: jnp.ndarray, *, S: int = 1,
-                      rule: str = "gol") -> jnp.ndarray:
+                      nbr: jnp.ndarray, *, S: int = 1, rule: str = "gol",
+                      bc=PERIODIC, bnd: jnp.ndarray | None = None) -> jnp.ndarray:
     """Oracle for stencil3d.stencil_step_fused: the temporal-blocked form.
 
     Assembles the wide (T+2·S·g)³ window once, then runs S substeps of
@@ -80,11 +82,21 @@ def stencil_fused_ref(store: jnp.ndarray, weights: jnp.ndarray,
     Bit-identical (f32 stores) to S sequential resident steps. Accepts
     the distributed extended store (shell blocks appended after the
     core, nbr rows = core only) like the kernel does.
+
+    Clamped boundaries (DESIGN.md §8) mirror the kernel exactly: before
+    every substep the ghost layers on faces flagged in ``bnd``
+    ((nb, 6), core.neighbors.boundary_face_table column order) are
+    substituted via rules.apply_window_bc — the same shared helper.
     """
     g = (weights.shape[0] - 1) // 2
+    bc = as_boundary(bc)
     r = get_rule(rule)
+    if bc.clamped and bnd is None:
+        raise ValueError(f"bc={bc.kind!r} needs the (nb, 6) bnd flag table")
     x = assemble_halo_ref(store, nbr, S * g).astype(jnp.float32)
-    for _ in range(S):
+    for u in range(S):
+        x = apply_window_bc(x, jnp.asarray(bnd), g * (S - u), bc) \
+            if bc.clamped else x
         tap = stencil_sum_ref(x, weights)
         centre = x[:, g:-g, g:-g, g:-g]
         x = r.apply(centre, tap, g)
@@ -102,11 +114,16 @@ def gol_rule_ref(state: jnp.ndarray, neigh_sum: jnp.ndarray, g: int) -> jnp.ndar
     return get_rule("gol").apply(state, neigh_sum, g).astype(state.dtype)
 
 
-def gol3d_step_ref(cube: jnp.ndarray, g: int, periodic: bool = True) -> jnp.ndarray:
-    """One gol3d update on an (M,M,M) cube in canonical row-major layout."""
+def gol3d_step_ref(cube: jnp.ndarray, g: int, bc=PERIODIC) -> jnp.ndarray:
+    """One gol3d update on an (M,M,M) cube in canonical row-major layout.
+
+    ``bc`` is the boundary contract (core.boundary): the ghost extension
+    is a wrap pad (periodic), a constant pad (dirichlet) or an edge-
+    replication pad (neumann0) — the ordering-independent oracle every
+    pipeline form is validated against, for every boundary kind.
+    """
     s = 2 * g + 1
-    mode = "wrap" if periodic else "constant"
-    xp = jnp.pad(cube, g, mode=mode) if periodic else jnp.pad(cube, g)
+    xp = pad_cube(cube, g, bc)
     M = cube.shape[0]
     total = jnp.zeros_like(cube, dtype=jnp.float32)
     for dk in range(s):

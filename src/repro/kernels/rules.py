@@ -1,4 +1,4 @@
-"""Update-rule registry for the fused stencil epilogue (DESIGN.md §4).
+"""Update-rule registry + boundary tap substitution (DESIGN.md §4, §8).
 
 The temporal-blocked kernel (stencil3d.stencil_step_fused) applies
 ``state' = rule(state, tap_sum)`` after every in-VMEM tap sum, so the
@@ -14,6 +14,15 @@ back to the store dtype at the step boundary. ``tap_sum`` is the
 weighted (2g+1)³ tap sum of the *current* state — with the default
 zero-centre uniform weights (ops.uniform_weights) it is the neighbour
 count/sum the classic rules expect.
+
+:func:`apply_window_bc` is the rules' boundary companion (DESIGN.md §8):
+on clamped runs every substep's tap sum must read *boundary* values —
+not wrapped or stale data — from the ghost sites outside the physical
+domain, so the kernel and the oracles call this one helper to substitute
+them before each tap sum. Like the rules themselves it is a single
+pure-jnp definition shared verbatim by the Pallas kernel (per-window,
+scalar flags from the prefetch channel) and the batched jnp oracles,
+which is what keeps fused-vs-sequential clamped runs bit-identical.
 """
 
 from __future__ import annotations
@@ -21,9 +30,13 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
-__all__ = ["UpdateRule", "RULES", "get_rule", "gol_thresholds"]
+from repro.core.boundary import BoundarySpec, as_boundary
+
+__all__ = ["UpdateRule", "RULES", "get_rule", "gol_thresholds",
+           "apply_window_bc"]
 
 
 @dataclass(frozen=True)
@@ -70,6 +83,65 @@ RULES: dict[str, UpdateRule] = {
     "jacobi": UpdateRule("jacobi", _jacobi, "Jacobi/heat box-filter relaxation"),
     "identity": UpdateRule("identity", _identity, "raw weighted stencil sum"),
 }
+
+
+def _plane(x: jnp.ndarray, axis: int, i: int) -> jnp.ndarray:
+    """Size-1 static slice at index ``i`` along one of the last 3 axes."""
+    idx = [slice(None)] * x.ndim
+    idx[axis] = slice(i, i + 1)
+    return x[tuple(idx)]
+
+
+def apply_window_bc(x: jnp.ndarray, flags, depth: int,
+                    bc: BoundarySpec | str) -> jnp.ndarray:
+    """Substitute boundary values into a window's ghost layers.
+
+    x:      a stencil window whose last three axes span the spatial
+            extent — ``(E, E, E)`` inside the fused kernel, or
+            ``(nb, E, E, E)`` in the batched jnp oracle.
+    flags:  which of the window's six faces are clamped *domain* faces,
+            in ``core.neighbors.OFFSETS_FACE`` order [k-,k+,i-,i+,j-,j+]
+            — a ``(6,)``/``(nb, 6)`` int array, or a sequence of six
+            scalars (the kernel reads them off the scalar-prefetch ref).
+    depth:  ghost width to refresh: the outer ``depth`` layers of each
+            flagged face are outside the physical domain.
+    bc:     the contract (core.boundary): dirichlet writes the constant,
+            neumann0 replicates the adjacent domain-edge plane; periodic
+            is a no-op (ghost data arrives by wrap/exchange instead).
+
+    Axes are refreshed sequentially (k, then i, then j) so corner ghost
+    regions compose exactly like ``jnp.pad``'s per-axis semantics — the
+    invariant that keeps every pipeline form equal to the padded-cube
+    oracle (ref.gol3d_step_ref). The fused kernel calls this before
+    *every* substep with the shrinking ghost depth ``g·(S-u)``
+    (DESIGN.md §8): the refresh re-derives ghost layers from the current
+    in-window state, which is what lets clamped faces temporally block
+    as deep as periodic ones.
+    """
+    bc = as_boundary(bc)
+    if not bc.clamped or depth == 0:
+        return x
+    E = x.shape[-1]
+    batch = x.ndim > 3
+
+    def flag(col):
+        if isinstance(flags, (list, tuple)):
+            f = flags[col] != 0
+        else:
+            f = flags[..., col] != 0
+        return f[..., None, None, None] if batch else f
+
+    for ax in range(3):
+        axis = ax - 3
+        iota = jax.lax.broadcasted_iota(jnp.int32, x.shape[-3:], ax)
+        if bc.kind == "dirichlet":
+            lo_fill = hi_fill = jnp.asarray(bc.value, x.dtype)
+        else:  # neumann0: replicate the nearest in-domain plane
+            lo_fill = _plane(x, axis, depth)
+            hi_fill = _plane(x, axis, E - 1 - depth)
+        x = jnp.where((iota < depth) & flag(2 * ax), lo_fill, x)
+        x = jnp.where((iota >= E - depth) & flag(2 * ax + 1), hi_fill, x)
+    return x
 
 
 def get_rule(rule: str | UpdateRule) -> UpdateRule:

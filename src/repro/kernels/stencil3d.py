@@ -35,6 +35,15 @@ launches; per substep the HBM stream drops from
 ``((T+2·S·g)³ + T³)/S`` — the locality-for-bandwidth trade of
 Reissmann & Jahre, paid for with redundant boundary flops.
 
+Boundary contract (DESIGN.md §8): ``stencil_step_fused`` takes a
+``core.boundary.BoundarySpec`` plus a second scalar-prefetched
+``(nb, 6)`` table of per-block clamped-face flags; before every substep
+the flagged ghost layers are substituted with boundary values
+(rules.apply_window_bc), so physical domains temporally block exactly
+as deep as periodic ones. ``stencil_sum_blocks``/``stencil_sum_resident``
+stay periodic-only baselines (the repack form realises clamped runs by
+padding at blockize time instead).
+
 VMEM budget: ``4B·(2·(T+2Sg)³ + 2·T³ + (2g+1)³)`` — e.g. T=8, g=1, S=4
 → ~37 KiB; the ``plan()`` autotuner in stencil/pipeline.py picks (T, S)
 against the ~16 MiB/core budget. MXU note: a pure stencil is VPU work
@@ -54,7 +63,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .rules import get_rule
+from repro.core.boundary import PERIODIC, BoundarySpec, as_boundary
+
+from .rules import apply_window_bc, get_rule
 
 __all__ = ["stencil_sum_blocks", "stencil_sum_resident", "stencil_step_fused"]
 
@@ -143,9 +154,11 @@ def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
     o_ref[0] = _tap_sum(x, w_ref, T, s)
 
 
-def _piece_index(i, nbr_ref, *, col: int, bidx: tuple):
+def _piece_index(i, nbr_ref, *_extra_prefetch, col: int, bidx: tuple):
     # nbr_ref[i, col] is the path position of the neighbour block this
     # piece is sliced from; bidx addresses the slice in block-shape units.
+    # Extra scalar-prefetch refs (the fused kernel's bnd flags) don't
+    # steer piece addressing.
     return (nbr_ref[i, col],) + bidx
 
 
@@ -212,18 +225,28 @@ def stencil_sum_resident(store: jnp.ndarray, weights: jnp.ndarray,
 
 # ------------------------------------------------------- temporal-blocked form
 
-def _fused_kernel(nbr_ref, w_ref, *refs, T: int, s: int, g: int, S: int,
-                  rule):
+def _fused_kernel(nbr_ref, bnd_ref, w_ref, *refs, T: int, s: int, g: int,
+                  S: int, rule, bc: BoundarySpec):
     """S substeps of tap-sum + update rule, entirely in VMEM.
 
     The assembled window starts at (T+2·S·g)³ and shrinks by g per side
     each substep — boundary sites are recomputed redundantly instead of
     re-read from HBM (DESIGN.md §4). Nothing intermediate (tap sums,
     partial states) ever touches HBM; the single write is the T³ tile.
+
+    Clamped runs (DESIGN.md §8): before every substep, the outer
+    ``g·(S-u)`` ghost layers on faces flagged in ``bnd_ref`` (the second
+    scalar-prefetch operand) are substituted with boundary values —
+    dirichlet constants or the replicated domain-edge plane — so domain
+    sites only ever consume valid taps and clamped faces temporally
+    block exactly as deep as periodic ones.
     """
     o_ref = refs[-1]
     x = _assemble_window(refs[:-1])  # (T+2·S·g,)³ f32
+    i = pl.program_id(0)
+    flags = tuple(bnd_ref[i, c] for c in range(6))
     for u in range(S):
+        x = apply_window_bc(x, flags, g * (S - u), bc)
         out_e = T + 2 * g * (S - 1 - u)      # window edge after this substep
         tap = _tap_sum(x, w_ref, out_e, s)
         centre = x[g:g + out_e, g:g + out_e, g:g + out_e]
@@ -231,10 +254,12 @@ def _fused_kernel(nbr_ref, w_ref, *refs, T: int, s: int, g: int, S: int,
     o_ref[0] = x.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("g", "S", "rule", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("g", "S", "rule", "bc", "interpret"))
 def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
-                       nbr: jnp.ndarray, *, g: int, S: int = 1,
-                       rule: str = "gol",
+                       nbr: jnp.ndarray, bnd: jnp.ndarray | None = None,
+                       *, g: int, S: int = 1, rule: str = "gol",
+                       bc: BoundarySpec | str = PERIODIC,
                        interpret: bool = True) -> jnp.ndarray:
     """S fused timesteps over the resident store, one HBM round-trip.
 
@@ -246,13 +271,21 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
              the kernel only writes the nbr-indexed core.
     weights: (2g+1, 2g+1, 2g+1) tap weights (ops.uniform_weights for the
              classic neighbour-count rules)
-    nbr:     (nb, 27) int32 neighbour table (core.neighbors, periodic or
-             extended), scalar-prefetched; nb ≤ nb_src, and column
-             SELF_COL must be the row index (both builders guarantee it)
+    nbr:     (nb, 27) int32 neighbour table (core.neighbors — periodic,
+             clamped, or extended), scalar-prefetched; nb ≤ nb_src, and
+             column SELF_COL must be the row index (the builders
+             guarantee it)
+    bnd:     (nb, 6) int32 clamped-domain-face flags per block, OFFSETS_FACE
+             column order (core.neighbors.boundary_face_table; the
+             distributed pipeline masks it by mesh position). Required
+             when ``bc`` is clamped; ignored (may be None) for periodic.
     g:       stencil radius; S: substeps per launch; rule: kernels/rules.py
              registry key ("gol" | "jacobi" | "identity")
+    bc:      boundary contract (core.boundary.BoundarySpec or its kind
+             string): "periodic" (default) | "dirichlet" | "neumann0"
     returns: (nb, T, T, T) in store dtype — bit-identical (for f32
-             stores) to S sequential resident steps of the same rule.
+             stores) to S sequential resident steps of the same rule and
+             boundary.
 
     Halo pieces have extent S·g and are addressed in block-shape units,
     so S·g must divide T (deep temporal blocking needs S·g ≤ T: the
@@ -262,6 +295,7 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
     """
     nb_src, T = store.shape[0], store.shape[1]
     s = 2 * g + 1
+    bc = as_boundary(bc)
     assert store.shape == (nb_src, T, T, T), store.shape
     assert weights.shape == (s, s, s), (weights.shape, s)
     nb = nbr.shape[0]
@@ -270,19 +304,26 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
     if S < 1 or h > T or T % h:
         raise ValueError(
             f"fused kernel needs 1 <= S and S*g | T, got T={T}, g={g}, S={S}")
+    if bc.clamped and bnd is None:
+        raise ValueError(f"bc={bc.kind!r} needs the (nb, 6) bnd flag table "
+                         "(core.neighbors.boundary_face_table)")
+    if bnd is None:
+        bnd = jnp.zeros((nb, 6), jnp.int32)
+    assert bnd.shape == (nb, 6), bnd.shape
 
-    in_specs = [pl.BlockSpec((s, s, s), lambda i, nbr_ref: (0, 0, 0))]
+    in_specs = [pl.BlockSpec((s, s, s), lambda i, nbr_ref, bnd_ref: (0, 0, 0))]
     in_specs += _piece_specs(T, h)
     kern = functools.partial(_fused_kernel, T=T, s=s, g=g, S=S,
-                             rule=get_rule(rule))
+                             rule=get_rule(rule), bc=bc)
     return pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((nb, T, T, T), store.dtype),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=(nb,),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, T, T, T), lambda i, nbr_ref: (i, 0, 0, 0)),
+            out_specs=pl.BlockSpec((1, T, T, T),
+                                   lambda i, nbr_ref, bnd_ref: (i, 0, 0, 0)),
         ),
         interpret=interpret,
-    )(nbr.astype(jnp.int32), weights, *([store] * 27))
+    )(nbr.astype(jnp.int32), bnd.astype(jnp.int32), weights, *([store] * 27))

@@ -3,13 +3,13 @@
 from .gol3d import Gol3d, Gol3dConfig  # noqa: F401
 from .pipeline import (  # noqa: F401
     DistributedPipeline, ResidentPipeline, VMEM_BUDGET_BYTES,
-    distributed_bytes_per_step, exchange_bytes_per_step,
+    distributed_bytes_per_step, exchange_bytes_per_step, exchange_face_items,
     exchange_items_per_exchange, fused_items_per_launch, fused_vmem_bytes,
     repack_bytes_per_step, repack_items_per_step, resident_bytes_per_step,
     resident_unfused_bytes_per_step, resident_unfused_items_per_step,
 )
 from .domain import Decomposition3D, make_stencil_mesh, STENCIL_AXES  # noqa: F401
 from .halo import (  # noqa: F401
-    exchange_shell, make_distributed_step, shard_state, shard_substeps,
-    stencil_block_kind, surface_slab_scatter, unshard_state,
+    exchange_shell, make_distributed_step, shard_boundary_flags, shard_state,
+    shard_substeps, stencil_block_kind, surface_slab_scatter, unshard_state,
 )

@@ -27,7 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import OrderingSpec, ROW_MAJOR, apply_ordering, undo_ordering
+from repro.core import (OrderingSpec, PERIODIC, ROW_MAJOR, BoundarySpec,
+                        apply_ordering, as_boundary, undo_ordering)
 from repro.kernels import ops
 from repro.kernels import ref as kref
 
@@ -40,6 +41,23 @@ __all__ = ["Gol3dConfig", "Gol3d"]
 
 @dataclass(frozen=True)
 class Gol3dConfig:
+    """Static configuration of one gol3d run (hashable: rides jit keys).
+
+    M:          cube edge (power of 2)
+    g:          stencil radius — the update reads a (2g+1)³ tap cube
+    ordering:   storage ordering of the public path state (core.orderings)
+    block_T:    SFC block edge of the kernel pipelines (T | M)
+    substeps:   S fused timesteps per HBM round-trip (temporal blocking,
+                DESIGN.md §4); 0 delegates (T, S) to the plan() autotuners
+    use_kernel: Pallas kernels (interpret mode off-TPU) vs jnp oracles
+    bc:         boundary contract (core.boundary.BoundarySpec or kind
+                string): "periodic" wraps like a torus; "dirichlet" /
+                "neumann0" clamp the domain edges physically
+                (DESIGN.md §8) — every execution mode (repack, resident,
+                distributed) honours the same contract
+    density:    initial live fraction of the random seed state
+    seed:       RNG seed of the initial state
+    """
     M: int = 64                      # cube edge (power of 2)
     g: int = 1                       # stencil radius
     ordering: OrderingSpec = ROW_MAJOR
@@ -48,6 +66,10 @@ class Gol3dConfig:
     use_kernel: bool = False         # Pallas kernel (interpret on CPU) vs jnp
     density: float = 0.3             # initial live fraction
     seed: int = 0
+    bc: BoundarySpec = PERIODIC      # boundary contract (core.boundary)
+
+    def __post_init__(self):
+        object.__setattr__(self, "bc", as_boundary(self.bc))
 
 
 @dataclass
@@ -80,7 +102,7 @@ class Gol3d:
         def step(state_path):
             cube = undo_ordering(state_path, cfg.ordering, cfg.M)
             nxt = ops.gol3d_step(cube, g=cfg.g, T=cfg.block_T, block_kind=kind,
-                                 use_kernel=cfg.use_kernel)
+                                 use_kernel=cfg.use_kernel, bc=cfg.bc)
             return apply_ordering(nxt, cfg.ordering)
 
         return step
@@ -102,10 +124,10 @@ class Gol3d:
         cfg = self.cfg
         if cfg.substeps == 0:
             return ResidentPipeline.plan(cfg.M, g=cfg.g, kind=self.block_kind,
-                                         use_kernel=cfg.use_kernel)
+                                         bc=cfg.bc, use_kernel=cfg.use_kernel)
         return ResidentPipeline(M=cfg.M, T=cfg.block_T, g=cfg.g,
                                 kind=self.block_kind, S=cfg.substeps,
-                                use_kernel=cfg.use_kernel)
+                                bc=cfg.bc, use_kernel=cfg.use_kernel)
 
     def run_resident(self, n_steps: int) -> jnp.ndarray:
         """Fused multi-step run: the curve-ordered block store is the
@@ -129,10 +151,11 @@ class Gol3d:
         local = Decomposition3D(cfg.M, procs).check_local_pow2_cube()
         if cfg.substeps == 0:
             return DistributedPipeline.plan(mesh, cfg.ordering, local,
-                                            g=cfg.g, use_kernel=cfg.use_kernel)
+                                            g=cfg.g, bc=cfg.bc,
+                                            use_kernel=cfg.use_kernel)
         T = min(cfg.block_T, local)
         return DistributedPipeline(mesh=mesh, spec=cfg.ordering, M=local,
-                                   T=T, g=cfg.g, S=cfg.substeps,
+                                   T=T, g=cfg.g, S=cfg.substeps, bc=cfg.bc,
                                    use_kernel=cfg.use_kernel)
 
     def run_distributed(self, mesh: jax.sharding.Mesh, n_steps: int) -> jnp.ndarray:
@@ -146,8 +169,8 @@ class Gol3d:
         return self.state_path
 
     def reference_run(self, n_steps: int) -> jnp.ndarray:
-        """Ordering-independent oracle on the canonical cube."""
+        """Ordering-independent oracle on the canonical cube (same bc)."""
         cube = self.cube
         for _ in range(n_steps):
-            cube = kref.gol3d_step_ref(cube, self.cfg.g)
+            cube = kref.gol3d_step_ref(cube, self.cfg.g, bc=self.cfg.bc)
         return cube

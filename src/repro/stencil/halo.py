@@ -20,6 +20,12 @@ canonical-cube materialisation, ever.
 
 On a TPU torus with Hilbert device ordering (launch/mesh.py) the six
 ppermutes are single-hop ICI transfers.
+
+Physical (clamped) boundaries — DESIGN.md §8: under a clamped
+``core.boundary.BoundarySpec`` the rings are open (no wrap pairs, so no
+ICI traffic across domain faces), mesh-edge shards fill their unserved
+shell slabs with boundary values, and the fused substeps refresh ghost
+layers per substep from the shard's mesh-masked block flags.
 """
 
 from __future__ import annotations
@@ -33,9 +39,11 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import OrderingSpec, path_to_rmo, rmo_to_path
+from repro.core.boundary import PERIODIC, BoundarySpec, as_boundary
 from repro.core.cache_model import face_mask
 from repro.core.layout import device_constant, store_spec
-from repro.core.neighbors import (block_kind_of, extended_neighbor_table_device,
+from repro.core.neighbors import (block_kind_of, boundary_face_table_device,
+                                  extended_neighbor_table_device,
                                   ring_perms, shell_block_count)
 from repro.core.surfaces import shell_slab_positions, shell_slab_shapes
 from repro.kernels import ops
@@ -46,8 +54,8 @@ from repro.kernels.stencil3d import stencil_step_fused
 from .domain import STENCIL_AXES
 
 __all__ = ["surface_slab_scatter", "exchange_shell", "shard_substeps",
-           "make_distributed_step", "stencil_block_kind",
-           "shard_state", "unshard_state"]
+           "shard_boundary_flags", "make_distributed_step",
+           "stencil_block_kind", "shard_state", "unshard_state"]
 
 
 @functools.lru_cache(maxsize=256)
@@ -109,8 +117,26 @@ def _unpack_recv(buf, hspec, M, h, face, shape):
     return jnp.zeros(h * M * M, buf.dtype).at[pos].set(buf).reshape(shape)
 
 
+def _bc_face_fill(face: jnp.ndarray, axis: int, side: str,
+                  bc: BoundarySpec) -> jnp.ndarray:
+    """Boundary values for one shell slab of a clamped domain face.
+
+    ``face`` is the slab the shard *would* send outward on that side
+    (own deep face, already carrying any previously-filled edge data);
+    the returned array is what a mesh-edge shard holds in the ghost slab
+    instead of exchanged data: the dirichlet constant, or — neumann0 —
+    the outermost in-domain plane of ``face`` replicated across the
+    slab's ``h`` width (clamp-copy).
+    """
+    if bc.kind == "dirichlet":
+        return jnp.full(face.shape, bc.value, face.dtype)
+    edge = 0 if side == "lo" else face.shape[axis] - 1
+    plane = jax.lax.slice_in_dim(face, edge, edge + 1, axis=axis)
+    return jnp.broadcast_to(plane, face.shape)
+
+
 def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
-                   h: int, axis_names=STENCIL_AXES):
+                   h: int, axis_names=STENCIL_AXES, bc=PERIODIC):
     """Deep (width-h) corner-correct shell exchange from the block store.
 
     ``store_flat`` is the shard's ``(nb·T³,)`` ravelled curve-ordered
@@ -124,18 +150,43 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
 
     Per-axis ICI volume is 2h·M², 2h·(M+2h)·M, 2h·(M+2h)² items — the
     ``exchange_items_per_exchange`` model in stencil/pipeline.py.
+
+    Clamped boundaries (core.boundary, DESIGN.md §8): each axis ring is
+    *open* — ``ring_perms(n, periodic=False)`` omits the wrapping pairs,
+    so no bytes ever cross a clamped domain face — and mesh-edge shards
+    substitute boundary values into the unserved slabs (dirichlet
+    constant or neumann0 clamp-copy of their own outermost plane) before
+    the next axis forwards them, which keeps corner regions composed
+    exactly like the padded-cube oracle. Interior shards are untouched.
     """
+    bc = as_boundary(bc)
+    periodic = not bc.clamped
     hspec = store_spec(kind, T)
     shp_k, _, shp_i, _, shp_j, _ = shell_slab_shapes(M, h)
+
+    def _fill_edges(slab_lo, slab_hi, face_lo, face_hi, axis, ax_name):
+        """On mesh-edge shards, replace received-zero slabs with BC data."""
+        n = jax.lax.psum(1, ax_name)
+        pos = jax.lax.axis_index(ax_name)
+        slab_lo = jnp.where(pos == 0,
+                            _bc_face_fill(face_lo, axis, "lo", bc), slab_lo)
+        slab_hi = jnp.where(pos == n - 1,
+                            _bc_face_fill(face_hi, axis, "hi", bc), slab_hi)
+        return slab_lo, slab_hi
 
     # --- k axis: pack the deep slab faces, ring-shift, unpack
     buf_k0 = ops.pack_surface(store_flat, hspec, M, h, "k0")
     buf_k1 = ops.pack_surface(store_flat, hspec, M, h, "k1")
-    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[0]))
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[0]), periodic=periodic)
     recv_lo = jax.lax.ppermute(buf_k1, axis_names[0], fwd)  # prev's high face
     recv_hi = jax.lax.ppermute(buf_k0, axis_names[0], bwd)  # next's low face
     slab_k_lo = _unpack_recv(recv_lo, hspec, M, h, "k1", shp_k)
     slab_k_hi = _unpack_recv(recv_hi, hspec, M, h, "k0", shp_k)
+    if not periodic:
+        own_k0 = _pack_to_slab(store_flat, hspec, M, h, "k0", shp_k)
+        own_k1 = _pack_to_slab(store_flat, hspec, M, h, "k1", shp_k)
+        slab_k_lo, slab_k_hi = _fill_edges(slab_k_lo, slab_k_hi,
+                                           own_k0, own_k1, 0, axis_names[0])
 
     # --- i axis: core faces + k-received edges (corner-correct)
     my_i0 = _pack_to_slab(store_flat, hspec, M, h, "i0", (M, h, M))
@@ -144,9 +195,12 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
         [slab_k_lo[:, :h, :], my_i0, slab_k_hi[:, :h, :]], axis=0)
     face_i1 = jnp.concatenate(
         [slab_k_lo[:, M - h:, :], my_i1, slab_k_hi[:, M - h:, :]], axis=0)
-    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[1]))
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[1]), periodic=periodic)
     slab_i_lo = jax.lax.ppermute(face_i1, axis_names[1], fwd)
     slab_i_hi = jax.lax.ppermute(face_i0, axis_names[1], bwd)
+    if not periodic:
+        slab_i_lo, slab_i_hi = _fill_edges(slab_i_lo, slab_i_hi,
+                                           face_i0, face_i1, 1, axis_names[1])
     assert slab_i_lo.shape == shp_i, (slab_i_lo.shape, shp_i)
 
     # --- j axis: core faces + both received edge sets
@@ -161,9 +215,12 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
 
     face_j0 = _j_face(my_j0, slice(0, h))
     face_j1 = _j_face(my_j1, slice(M - h, M))
-    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[2]))
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[2]), periodic=periodic)
     slab_j_lo = jax.lax.ppermute(face_j1, axis_names[2], fwd)
     slab_j_hi = jax.lax.ppermute(face_j0, axis_names[2], bwd)
+    if not periodic:
+        slab_j_lo, slab_j_hi = _fill_edges(slab_j_lo, slab_j_hi,
+                                           face_j0, face_j1, 2, axis_names[2])
     assert slab_j_lo.shape == shp_j, (slab_j_lo.shape, shp_j)
 
     return slab_k_lo, slab_k_hi, slab_i_lo, slab_i_hi, slab_j_lo, slab_j_hi
@@ -174,9 +231,29 @@ def _shell_positions_device(nt: int, T: int, h: int):
                            lambda: shell_slab_positions(nt, T, h))
 
 
+def shard_boundary_flags(kind: str, nt: int,
+                         axis_names=STENCIL_AXES) -> jnp.ndarray:
+    """(nb, 6) clamped-domain-face flags for this shard's blocks.
+
+    The base table (core.neighbors.boundary_face_table) marks blocks on
+    the *local* grid edge; a face is a physical domain face only when
+    the shard also sits on the mesh edge of that axis, so each column is
+    AND-masked with the shard's position read off the shard_map axes
+    (axis_names order (dx, dy, dz) ↔ face columns (k∓, i∓, j∓)).
+    """
+    base = jnp.asarray(boundary_face_table_device(kind, nt))
+    edge = []
+    for ax in axis_names:
+        n = jax.lax.psum(1, ax)
+        pos = jax.lax.axis_index(ax)
+        edge += [pos == 0, pos == n - 1]
+    return base * jnp.stack(edge).astype(jnp.int32)[None, :]
+
+
 def shard_substeps(store: jnp.ndarray, *, kind: str, M: int, g: int, S: int,
-                   rule: str = "gol", use_kernel: bool = False,
-                   interpret: bool = True, axis_names=STENCIL_AXES) -> jnp.ndarray:
+                   rule: str = "gol", bc: BoundarySpec | str = PERIODIC,
+                   use_kernel: bool = False, interpret: bool = True,
+                   axis_names=STENCIL_AXES) -> jnp.ndarray:
     """One deep exchange + S fused substeps on the resident shard store.
 
     store: (nb, T, T, T) curve-ordered local block store (shard_map body).
@@ -186,23 +263,31 @@ def shard_substeps(store: jnp.ndarray, *, kind: str, M: int, g: int, S: int,
     neighbour table — the distributed counterpart of one
     ResidentPipeline launch. S sequential S=1 calls are bit-identical
     (f32) to one S-deep call, same argument as the fused kernel.
+
+    On clamped runs (``bc``, core.boundary) the exchange fills mesh-edge
+    shell blocks with boundary values instead of ppermuted ghost data,
+    and the fused substeps refresh those ghost layers per substep via
+    the shard's mesh-masked face flags (:func:`shard_boundary_flags`) —
+    so the deep rounds stay bit-identical to S sequential clamped steps.
     """
     nb, T = store.shape[0], store.shape[1]
     nt = M // T
     assert nb == nt ** 3, (store.shape, M)
+    bc = as_boundary(bc)
     h = S * g
-    slabs = exchange_shell(store.reshape(-1), kind, M, T, h, axis_names)
+    slabs = exchange_shell(store.reshape(-1), kind, M, T, h, axis_names, bc=bc)
     vals = jnp.concatenate([s.reshape(-1) for s in slabs])
     pos = _shell_positions_device(nt, T, h)
     shell = jnp.zeros((shell_block_count(nt) * T ** 3,), store.dtype
                       ).at[pos].set(vals).reshape(-1, T, T, T)
     ext = jnp.concatenate([store, shell], axis=0)
     nbr = extended_neighbor_table_device(kind, nt)
+    bnd = shard_boundary_flags(kind, nt, axis_names) if bc.clamped else None
     w = uniform_weights(g)
     if use_kernel:
-        return stencil_step_fused(ext, w, nbr, g=g, S=S, rule=rule,
-                                  interpret=interpret)
-    return kref.stencil_fused_ref(ext, w, nbr, S=S, rule=rule)
+        return stencil_step_fused(ext, w, nbr, bnd, g=g, S=S, rule=rule,
+                                  bc=bc, interpret=interpret)
+    return kref.stencil_fused_ref(ext, w, nbr, S=S, rule=rule, bc=bc, bnd=bnd)
 
 
 def _store_perm(spec: OrderingSpec, kind: str, T: int, M: int,
@@ -228,13 +313,15 @@ def _store_perm_device(spec: OrderingSpec, kind: str, T: int, M: int,
 
 def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
                           local_M: int, g: int, *, T: int | None = None,
-                          rule: str = "gol", use_kernel: bool = False,
-                          interpret: bool = True):
+                          rule: str = "gol", bc: BoundarySpec | str = PERIODIC,
+                          use_kernel: bool = False, interpret: bool = True):
     """jit'd distributed stencil step on a sharded (P·M)³ global state.
 
     Global state layout: (px, py, pz, M³) — device (a,b,c) owns row
     [a,b,c] holding its local path-ordered state under ``spec``
-    (see :func:`shard_state`). Returns step(global_state) -> global_state.
+    (see :func:`shard_state`). ``bc`` selects the boundary contract
+    (core.boundary: periodic | dirichlet | neumann0). Returns
+    step(global_state) -> global_state.
 
     The legacy per-step reference for DistributedPipeline (which runs the
     same :func:`shard_substeps` round at depth S): no per-step full-cube
@@ -254,7 +341,7 @@ def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
         s = state_path.reshape(-1)
         store = s[_store_perm_device(spec, kind, T, local_M, False)]
         store = shard_substeps(store.reshape(nt ** 3, T, T, T), kind=kind,
-                               M=local_M, g=g, S=1, rule=rule,
+                               M=local_M, g=g, S=1, rule=rule, bc=bc,
                                use_kernel=use_kernel, interpret=interpret)
         out = store.reshape(-1)[_store_perm_device(spec, kind, T, local_M, True)]
         return out.reshape(1, 1, 1, -1)

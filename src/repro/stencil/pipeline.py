@@ -25,6 +25,13 @@ timesteps become ``ceil(K/S)`` HBM round-trips. ``plan()`` autotunes
 The ``*_items_per_*`` helpers are the single source of HBM-traffic
 accounting shared by benchmarks/stencil_update.py and
 benchmarks/kernel_bench.py (asserted consistent in tests).
+
+Both pipelines carry a boundary contract (``bc``,
+core.boundary.BoundarySpec — DESIGN.md §8): clamped runs swap in the
+non-wrapping neighbour tables, refresh ghost layers per substep, open
+the exchange rings (the clamped keywords of the exchange-bytes helpers
+model the smaller surface), and stay bit-identical (f32) between the
+S-deep and sequential forms exactly like the periodic case.
 """
 
 from __future__ import annotations
@@ -37,8 +44,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.core.boundary import PERIODIC, BoundarySpec, as_boundary
 from repro.core.layout import blockize, unblockize
-from repro.core.neighbors import neighbor_table_device
+from repro.core.neighbors import (boundary_face_table_device,
+                                  neighbor_table_device)
 from repro.core.orderings import OrderingSpec
 from repro.kernels import ref as kref
 from repro.kernels.ops import uniform_weights
@@ -55,8 +64,8 @@ __all__ = [
     "repack_items_per_step", "repack_bytes_per_step",
     "fused_items_per_launch", "resident_bytes_per_step",
     "resident_unfused_items_per_step", "resident_unfused_bytes_per_step",
-    "exchange_items_per_exchange", "exchange_bytes_per_step",
-    "distributed_bytes_per_step",
+    "exchange_face_items", "exchange_items_per_exchange",
+    "exchange_bytes_per_step", "distributed_bytes_per_step",
 ]
 
 # Conservative per-core VMEM working-set budget the autotuner plans
@@ -71,13 +80,22 @@ class ResidentPipeline:
 
     M:          cube edge (power of 2)
     T:          block edge (T | M; S·g | T for the kernel path)
-    g:          stencil radius (periodic boundaries)
+    g:          stencil radius
     kind:       block-grid curve — "morton" | "hilbert" | "row_major" |
                 "column_major" (core.neighbors.block_kind_of maps an
                 OrderingSpec here)
     S:          substeps fused into one kernel launch (temporal blocking)
     rule:       update rule registry key (kernels/rules.py)
+    bc:         boundary contract (core.boundary.BoundarySpec or kind
+                string): "periodic" (default, torus) | "dirichlet" |
+                "neumann0". Clamped runs use the non-wrapping neighbour
+                table and refresh ghost layers per substep — temporal
+                blocking stays exactly as deep at domain edges
+                (DESIGN.md §8).
     use_kernel: Pallas fused kernel (interpret on CPU) vs jnp oracle
+
+    Every knob is a static (hashable) field: a pipeline instance is both
+    the configuration and the jit cache key of its runners.
     """
     M: int
     T: int = 8
@@ -87,8 +105,10 @@ class ResidentPipeline:
     interpret: bool = True
     S: int = 1
     rule: str = "gol"
+    bc: BoundarySpec = PERIODIC
 
     def __post_init__(self):
+        object.__setattr__(self, "bc", as_boundary(self.bc))
         assert self.M % self.T == 0, (self.M, self.T)
         if not self._valid_S(self.S):
             raise ValueError(
@@ -111,6 +131,7 @@ class ResidentPipeline:
     @classmethod
     def plan(cls, M: int, g: int = 1, kind: str = "morton",
              rule: str = "gol", n_steps: int = 10, *,
+             bc: BoundarySpec | str = PERIODIC,
              vmem_limit: int = VMEM_BUDGET_BYTES, max_S: int = 8,
              use_kernel: bool = False, interpret: bool = True,
              itemsize: int = 4) -> "ResidentPipeline":
@@ -123,13 +144,16 @@ class ResidentPipeline:
         non-monotone in S at fixed T — window inflation (T+2·S·g)³/S
         eventually out-grows the S× amortisation — so this is a real
         search, not "largest S that fits". Ties break toward smaller
-        windows.
+        windows. ``bc`` threads through to the pipeline unchanged: the
+        single-device HBM stream is boundary-independent (clamped runs
+        trade wrapped halo reads for in-window substitution, same
+        window), so the plan itself does not shift.
         """
         T, S = _plan_search(
             M, g, max_S, vmem_limit, itemsize,
             lambda T, S: resident_bytes_per_step(M, T, g, n_steps,
                                                  itemsize, S=S))
-        return cls(M=M, T=T, g=g, kind=kind, S=S, rule=rule,
+        return cls(M=M, T=T, g=g, kind=kind, S=S, rule=rule, bc=bc,
                    use_kernel=use_kernel, interpret=interpret)
 
     # -- layout boundary (paid once per K-step run, not per step) ---------
@@ -145,24 +169,30 @@ class ResidentPipeline:
 
         Kernel mode is one ``stencil_step_fused`` launch; oracle mode is
         the same math as sequential jnp substeps — bit-identical for f32
-        stores (substeps accumulate in f32 on both paths).
+        stores (substeps accumulate in f32 on both paths). Clamped runs
+        feed the non-wrapping neighbour table plus the block boundary
+        flags; the per-substep ghost refresh lives in the shared
+        kernels/rules.apply_window_bc helper on both paths.
         """
         S = self.S if substeps is None else substeps
         assert self._valid_S(S), (self.T, self.g, S)
-        g, w = self.g, uniform_weights(self.g)
-        nbr = neighbor_table_device(self.kind, self.nt)
+        g, bc, w = self.g, self.bc, uniform_weights(self.g)
+        nbr = neighbor_table_device(self.kind, self.nt,
+                                    periodic=not bc.clamped)
+        bnd = boundary_face_table_device(self.kind, self.nt) \
+            if bc.clamped else None
         rule = get_rule(self.rule)
         use_kernel, interpret = self.use_kernel, self.interpret
 
         def step(store):
             if use_kernel:
-                return stencil_step_fused(store, w, nbr, g=g, S=S,
-                                          rule=rule.name, interpret=interpret)
+                return stencil_step_fused(store, w, nbr, bnd, g=g, S=S,
+                                          rule=rule.name, bc=bc,
+                                          interpret=interpret)
             out = store
             for _ in range(S):
-                neigh = kref.stencil_sum_resident_ref(out, w, nbr)
-                out = rule.apply(out.astype(jnp.float32), neigh, g
-                                 ).astype(store.dtype)
+                out = kref.stencil_fused_ref(out, w, nbr, S=1,
+                                             rule=rule, bc=bc, bnd=bnd)
             return out
 
         return step
@@ -313,36 +343,84 @@ def _boundary_items(M: int) -> int:
     return 4 * M ** 3
 
 
-def exchange_items_per_exchange(M: int, g: int, S: int = 1) -> int:
-    """ICI items one shard moves per deep halo exchange (h = S·g).
+def exchange_face_items(M: int, g: int, S: int = 1) -> tuple[int, int, int]:
+    """Per-axis items of ONE sent face at exchange depth h = S·g.
 
-    Axis-sequential corner-correct scheme (stencil/halo.exchange_shell):
+    Axis-sequential corner-correct extents (stencil/halo.exchange_shell):
     the k faces are bare h·M² slabs, the i faces carry the k-received
-    edges (h·(M+2h)·M), the j faces both (h·(M+2h)²); each axis sends
-    both directions. Deep halos therefore move *slightly more* bytes in
-    total (the corner terms grow with h) — what S buys is S× fewer
-    exchanges (latency/launch amortisation) and the fused kernel's HBM
-    amortisation, the communication-avoiding trade.
+    edges (h·(M+2h)·M), the j faces both (h·(M+2h)²). These are exactly
+    the packed slab shapes (core/surfaces.shell_slab_shapes) — asserted
+    equal in tests — so the model *is* the wire format.
     """
     h = S * g
     e = M + 2 * h
-    return 2 * h * M * M + 2 * h * e * M + 2 * h * e * e
+    return (h * M * M, h * e * M, h * e * e)
 
 
-def exchange_bytes_per_step(M: int, g: int, S: int = 1,
-                            itemsize: int = 4) -> float:
-    """Modelled ICI bytes per *timestep*: one width-S·g exchange funds S."""
-    return itemsize * exchange_items_per_exchange(M, g, S) / S
+def exchange_items_per_exchange(M: int, g: int, S: int = 1, *,
+                                bc: BoundarySpec | str = PERIODIC,
+                                procs: tuple[int, int, int] | None = None,
+                                coords: tuple[int, int, int] | None = None
+                                ) -> float:
+    """ICI items one shard moves per deep halo exchange (h = S·g).
+
+    Periodic (default): every shard sends both faces on all three axes —
+    ``2h·[M² + (M+2h)·M + (M+2h)²]`` items. Deep halos therefore move
+    *slightly more* bytes in total (the corner terms grow with h) — what
+    S buys is S× fewer exchanges (latency/launch amortisation) and the
+    fused kernel's HBM amortisation, the communication-avoiding trade.
+
+    Clamped (``bc`` dirichlet/neumann0): the rings are open, so a send
+    happens only where a neighbour exists — pass the mesh shape
+    ``procs`` and either a shard's mesh ``coords`` (that shard's exact
+    items: each axis contributes its face size once per existing
+    neighbour, so mesh-edge shards move strictly fewer bytes than the
+    periodic torus) or ``coords=None`` for the mesh-wide mean
+    (``2(p-1)/p`` faces per axis — the smaller exchange surface
+    DistributedPipeline.plan() minimises).
+    """
+    sizes = exchange_face_items(M, g, S)
+    if not as_boundary(bc).clamped:
+        return float(2 * sum(sizes))
+    if procs is None:
+        raise ValueError("clamped exchange accounting needs the mesh "
+                         "shape (procs=(px, py, pz))")
+    total = 0.0
+    for ax, sz in enumerate(sizes):
+        p = procs[ax]
+        if coords is None:
+            total += sz * 2 * (p - 1) / p
+        else:
+            total += sz * ((coords[ax] > 0) + (coords[ax] < p - 1))
+    return total
+
+
+def exchange_bytes_per_step(M: int, g: int, S: int = 1, itemsize: int = 4, *,
+                            bc: BoundarySpec | str = PERIODIC,
+                            procs: tuple[int, int, int] | None = None,
+                            coords: tuple[int, int, int] | None = None
+                            ) -> float:
+    """Modelled ICI bytes per *timestep*: one width-S·g exchange funds S
+    (clamped keyword accounting as in exchange_items_per_exchange)."""
+    items = exchange_items_per_exchange(M, g, S, bc=bc, procs=procs,
+                                        coords=coords)
+    return itemsize * items / S
 
 
 def distributed_bytes_per_step(M: int, T: int, g: int, n_steps: int,
-                               itemsize: int = 4, *, S: int = 1) -> float:
+                               itemsize: int = 4, *, S: int = 1,
+                               bc: BoundarySpec | str = PERIODIC,
+                               procs: tuple[int, int, int] | None = None,
+                               coords: tuple[int, int, int] | None = None
+                               ) -> float:
     """Total modelled data movement per timestep of one mesh shard:
     HBM (fused resident model) + ICI (deep-exchange model) — the
     single-accounting number behind the distributed benchmark rows and
-    DistributedPipeline.plan()."""
+    DistributedPipeline.plan(). The HBM term is boundary-independent;
+    the ICI term shrinks on clamped meshes (edge shards skip faces)."""
     return (resident_bytes_per_step(M, T, g, n_steps, itemsize, S=S)
-            + exchange_bytes_per_step(M, g, S, itemsize))
+            + exchange_bytes_per_step(M, g, S, itemsize, bc=bc, procs=procs,
+                                      coords=coords))
 
 
 # ---------------------------------------------------------------------------
@@ -366,6 +444,13 @@ class DistributedPipeline:
     spec:  element ordering of the public sharded state (shard_state)
     M:     local shard edge (power of 2); T: block edge (T | M, S·g | T)
     g:     stencil radius; S: substeps per exchange; rule: rules.py key
+    bc:    boundary contract (core.boundary): "periodic" (torus wrap,
+           default) | "dirichlet" | "neumann0". Clamped runs open the
+           exchange rings (mesh-edge shards move no bytes across domain
+           faces; their shell blocks carry boundary values instead) and
+           refresh ghost layers per substep — S-deep rounds stay
+           bit-identical (f32) to S sequential clamped steps
+           (DESIGN.md §8).
     """
     mesh: jax.sharding.Mesh = field(compare=False)
     spec: OrderingSpec = field(default=None)  # type: ignore[assignment]
@@ -376,8 +461,10 @@ class DistributedPipeline:
     rule: str = "gol"
     use_kernel: bool = False
     interpret: bool = True
+    bc: BoundarySpec = PERIODIC
 
     def __post_init__(self):
+        object.__setattr__(self, "bc", as_boundary(self.bc))
         assert self.spec is not None, "DistributedPipeline needs an OrderingSpec"
         assert self.M % self.T == 0, (self.M, self.T)
         if not self._valid_S(self.S):
@@ -405,6 +492,7 @@ class DistributedPipeline:
     @classmethod
     def plan(cls, mesh, spec: OrderingSpec, M: int, g: int = 1,
              rule: str = "gol", n_steps: int = 10, *,
+             bc: BoundarySpec | str = PERIODIC,
              vmem_limit: int = VMEM_BUDGET_BYTES, max_S: int = 8,
              use_kernel: bool = False, interpret: bool = True,
              itemsize: int = 4) -> "DistributedPipeline":
@@ -414,14 +502,18 @@ class DistributedPipeline:
         carries the exchange term: S trades window inflation against
         both HBM amortisation and exchange frequency (the corner terms
         of a deep exchange grow with S·g), so the optimum can shift
-        versus the single-device plan.
+        versus the single-device plan. Clamped ``bc`` shrinks the
+        exchange term to the mesh-wide mean surface (edge shards skip
+        faces on open rings), computed for this mesh's shape.
         """
+        procs = tuple(mesh.shape[a] for a in STENCIL_AXES)
         T, S = _plan_search(
             M, g, max_S, vmem_limit, itemsize,
             lambda T, S: distributed_bytes_per_step(M, T, g, n_steps,
-                                                    itemsize, S=S))
+                                                    itemsize, S=S, bc=bc,
+                                                    procs=procs))
         return cls(mesh=mesh, spec=spec, M=M, T=T, g=g, S=S, rule=rule,
-                   use_kernel=use_kernel, interpret=interpret)
+                   bc=bc, use_kernel=use_kernel, interpret=interpret)
 
     # -- the K-step runner -------------------------------------------------
     def run_fn(self, n_steps: int):
@@ -438,7 +530,7 @@ class DistributedPipeline:
         pspec = P(*STENCIL_AXES)
         spec, kind, M, T = self.spec, self.kind, self.M, self.T
         nt = M // T
-        round_kw = dict(kind=kind, M=M, g=self.g, rule=self.rule,
+        round_kw = dict(kind=kind, M=M, g=self.g, rule=self.rule, bc=self.bc,
                         use_kernel=self.use_kernel, interpret=self.interpret)
 
         def local_run(state_path):  # (1,1,1,M³) per device
@@ -473,12 +565,21 @@ class DistributedPipeline:
         return unshard_state(st, self.spec, self.global_M)
 
     # -- modelled traffic --------------------------------------------------
-    def bytes_per_step(self, n_steps: int, itemsize: int = 4) -> float:
+    def bytes_per_step(self, n_steps: int, itemsize: int = 4,
+                       coords: tuple[int, int, int] | None = None) -> float:
+        """HBM + ICI bytes per timestep: the mesh-wide mean shard by
+        default, or the shard at mesh ``coords`` (clamped runs only
+        differ per shard — edge shards skip faces)."""
         return distributed_bytes_per_step(self.M, self.T, self.g, n_steps,
-                                          itemsize, S=self.S)
+                                          itemsize, S=self.S, bc=self.bc,
+                                          procs=self.procs, coords=coords)
 
-    def exchange_bytes_per_step(self, itemsize: int = 4) -> float:
-        return exchange_bytes_per_step(self.M, self.g, self.S, itemsize)
+    def exchange_bytes_per_step(self, itemsize: int = 4,
+                                coords: tuple[int, int, int] | None = None
+                                ) -> float:
+        return exchange_bytes_per_step(self.M, self.g, self.S, itemsize,
+                                       bc=self.bc, procs=self.procs,
+                                       coords=coords)
 
     def vmem_bytes(self, itemsize: int = 4) -> int:
         return fused_vmem_bytes(self.T, self.g, self.S, itemsize)

@@ -43,6 +43,35 @@ def test_compare_derived_keys_and_row_churn():
     assert any("fresh" in n for n in notes)
 
 
+def test_compare_keys_threshold_pins_model_keys():
+    """Satellite: the deterministic modelled-bytes keys gate at their own
+    (tight) threshold while timings keep the noise-tolerant one."""
+    old = _rows(a=100.0)
+    new = _rows(a=150.0)  # +50% timing: under the 100% timing threshold
+    new["a"]["derived"]["fused_bytes_per_substep"] = 1010  # +1% model drift
+    reg, notes = compare(old, new, threshold=100.0, min_us=50.0,
+                         keys=["fused_bytes_per_substep"], keys_threshold=0.0)
+    assert len(reg) == 1 and "fused_bytes_per_substep" in reg[0]
+    # a model *decrease* only notes (improvements never fail)
+    new["a"]["derived"]["fused_bytes_per_substep"] = 900
+    reg, notes = compare(old, new, threshold=100.0, min_us=50.0,
+                         keys=["fused_bytes_per_substep"], keys_threshold=0.0)
+    assert not reg and any("fused_bytes_per_substep" in n for n in notes)
+
+
+def test_main_keys_threshold_flag(tmp_path):
+    rows_old = _rows(r=100.0)
+    rows_new = _rows(r=100.0)
+    rows_new["r"]["derived"]["fused_bytes_per_substep"] = 1001
+    for name, rows in [("old.json", rows_old), ("new.json", rows_new)]:
+        (tmp_path / name).write_text(json.dumps(
+            {"git_rev": name, "rows": list(rows.values())}))
+    argv = [str(tmp_path / "old.json"), str(tmp_path / "new.json"),
+            "--threshold", "100", "--keys", "fused_bytes_per_substep"]
+    assert main(argv) == 1                             # default pins exactly
+    assert main(argv + ["--keys-threshold", "25"]) == 0
+
+
 @pytest.mark.parametrize("new_us,code", [(100.0, 0), (300.0, 1)])
 def test_main_exit_codes(tmp_path, new_us, code):
     for name, us in [("old.json", 100.0), ("new.json", new_us)]:
