@@ -69,6 +69,12 @@ def compare(old: dict, new: dict, threshold: float, min_us: float,
                 f"(+{(nu / ou - 1) * 100:.0f}% > {threshold:.0f}%)")
         for k in keys:
             ov, nv = o["derived"].get(k), n["derived"].get(k)
+            if isinstance(ov, (int, float)) and nv is None:
+                # a still-present row stopped emitting a pinned key: the
+                # model output went dark, which must at least be visible
+                # (never fatal — key schemas evolve like rows do)
+                notes.append(f"~ {name}: {k} disappeared (was {ov:.0f})")
+                continue
             if not isinstance(ov, (int, float)) or \
                     not isinstance(nv, (int, float)) or ov <= 0:
                 continue

@@ -152,8 +152,22 @@ def resident_kernel_rows(M: int = 16, T: int = 8, g: int = 1,
     per_sub = fused_items_per_launch(M, T, g, S) / S
     out.append((f"kernel/stencil_fused_S{S}_interpret_{kind}",
                 (time.perf_counter() - t0) / 3 / S * 1e6,
-                f"T={T};g={g};nb={nb};S={S}"
+                f"T={T};g={g};nb={nb};S={S};fields=1"
                 f";hbm_items_per_substep={per_sub:.0f}"))
+
+    # multi-field wave (C=2, DESIGN.md §9): same fused launch over the
+    # stacked store — one grid step streams two windows, writes two tiles
+    wstore = jnp.stack([store, jnp.zeros_like(store)])
+    stencil_step_fused(wstore, gw, nbr, g=g, S=S, rule="wave")  # compile
+    t0 = time.perf_counter()
+    for _ in range(3):
+        r = stencil_step_fused(wstore, gw, nbr, g=g, S=S, rule="wave")
+    jax.block_until_ready(r)
+    per_sub2 = fused_items_per_launch(M, T, g, S, fields=2) / S
+    out.append((f"kernel/stencil_fused_wave_S{S}_interpret_{kind}",
+                (time.perf_counter() - t0) / 3 / S * 1e6,
+                f"T={T};g={g};nb={nb};S={S};fields=2"
+                f";hbm_items_per_substep={per_sub2:.0f}"))
     return out
 
 

@@ -11,11 +11,15 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
 Flags:
   --fast          smaller sizes (CI-friendly)
   --json PATH     additionally write {"git_rev": ..., "rows": [...]} where
-                  rows is a list of {"name", "us_per_call", "derived":
-                  {k: v}} objects — the machine-readable form the perf
-                  trajectory tracking consumes (derived "k=v;k=v" strings
-                  are split; numeric values are parsed; git_rev stamps
-                  which revision produced the numbers).
+                  rows is a list of {"name", "us_per_call", "fields",
+                  "derived": {k: v}} objects — the machine-readable form
+                  the perf trajectory tracking consumes (derived
+                  "k=v;k=v" strings are split; numeric values are parsed;
+                  git_rev stamps which revision produced the numbers;
+                  "fields" is the row's channel count C, defaulting to 1
+                  for rows that predate the multi-field store — the
+                  schema dimension the modelled-bytes keys are pinned
+                  under, DESIGN.md §9).
 """
 
 from __future__ import annotations
@@ -89,11 +93,14 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
 
     if json_path:
+        def _row(name, us, derived):
+            d = _parse_derived(derived)
+            return {"name": name, "us_per_call": round(us, 1),
+                    "fields": int(d.get("fields", 1)), "derived": d}
+
         payload = {
             "git_rev": git_rev(),
-            "rows": [{"name": name, "us_per_call": round(us, 1),
-                      "derived": _parse_derived(derived)}
-                     for name, us, derived in rows],
+            "rows": [_row(name, us, derived) for name, us, derived in rows],
         }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=1)

@@ -20,6 +20,14 @@ physical boundary (DESIGN.md §8): timing includes the per-substep ghost
 refresh, and ``derived`` adds the clamped exchange surface of a 2×2×2
 mesh shard (mean and corner) next to the periodic ICI model — the
 perf-trajectory record that edge shards exchange strictly fewer bytes.
+
+The ``multifield/`` rows run the C=2 ``wave`` workload through the same
+fused pipeline (DESIGN.md §9): every derived model key carries the ×C
+``fields`` factor (asserted against the shared helpers in
+tests/test_multifield.py), recording that a multi-field timestep
+streams exactly C× the single-field bytes — HBM and ICI alike.
+Every row stamps its ``fields`` so the perf trajectory can pin the
+channel dimension per row (benchmarks/run.py --json).
 """
 
 from __future__ import annotations
@@ -27,6 +35,8 @@ from __future__ import annotations
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core import HILBERT, MORTON, NEUMANN0, ROW_MAJOR
 from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
@@ -36,6 +46,7 @@ from repro.stencil import (Gol3d, Gol3dConfig, ResidentPipeline,
 
 N_ITERS = 10
 CLAMPED_PROCS = (2, 2, 2)  # mesh shape of the modelled clamped shard rows
+WAVE_FIELDS = 2            # C of the multifield/ wave rows
 
 
 def rows(sizes=(32, 64), stencils=(1, 2)):
@@ -58,6 +69,7 @@ def rows(sizes=(32, 64), stencils=(1, 2)):
                             f"ns_per_item={per_item_ns:.2f}"))
     out += resident_rows(sizes=sizes, stencils=stencils)
     out += clamped_rows(sizes=sizes)
+    out += multifield_rows(sizes=sizes)
     return out
 
 
@@ -74,7 +86,7 @@ def resident_derived(M: int, T: int, g: int, S: int, n_steps: int) -> str:
     rep_b = repack_bytes_per_step(M, T, g)
     exc_b = exchange_bytes_per_step(M, g, S)
     dst_b = distributed_bytes_per_step(M, T, g, n_steps, S=S)
-    return (f"S={S}"
+    return (f"S={S};fields=1"
             f";fused_bytes_per_substep={fus_b:.0f}"
             f";unfused_bytes_per_step={unf_b:.0f}"
             f";repack_bytes_per_step={rep_b:.0f}"
@@ -101,7 +113,7 @@ def clamped_derived(M: int, T: int, g: int, S: int, n_steps: int) -> str:
                                        coords=(0, 0, 0))
     dst_b = distributed_bytes_per_step(M, T, g, n_steps, S=S, bc=NEUMANN0,
                                        procs=CLAMPED_PROCS)
-    return (f"S={S};bc=neumann0"
+    return (f"S={S};bc=neumann0;fields=1"
             f";fused_bytes_per_substep={fus_b:.0f}"
             f";ici_bytes_per_step_periodic={per_b:.0f}"
             f";ici_bytes_per_step_clamped={mean_b:.0f}"
@@ -132,6 +144,58 @@ def clamped_rows(sizes=(32, 64), g=1, T=8, n_steps=N_ITERS):
                     dt * 1e6 / n_steps,
                     f"steps_per_s={n_steps / dt:.1f};"
                     + clamped_derived(M, T, g, S, n_steps),
+                ))
+    return out
+
+
+def multifield_derived(M: int, T: int, g: int, S: int, n_steps: int,
+                       C: int = WAVE_FIELDS) -> str:
+    """Shared-accounting derived string for one multi-field (wave) row.
+
+    Every model key carries the ×C ``fields`` factor (DESIGN.md §9):
+    the fused HBM stream moves C windows + C tiles per block, the deep
+    exchange packs C channels per face, and the distributed total is
+    their sum. ``fused_bytes_per_field_substep`` divides back to the
+    per-channel stream — equal to the C=1 fused model, the record that
+    the multi-field store adds *no* overhead beyond the ×C payload.
+    """
+    fus_b = resident_bytes_per_step(M, T, g, n_steps, S=S, fields=C)
+    one_b = resident_bytes_per_step(M, T, g, n_steps, S=S)
+    exc_b = exchange_bytes_per_step(M, g, S, fields=C)
+    dst_b = distributed_bytes_per_step(M, T, g, n_steps, S=S, fields=C)
+    return (f"S={S};fields={C}"
+            f";fused_bytes_per_substep={fus_b:.0f}"
+            f";fused_bytes_per_field_substep={fus_b / C:.0f}"
+            f";fused_vs_single_field={fus_b / one_b:.3f}"
+            f";ici_bytes_per_step={exc_b:.0f}"
+            f";distributed_bytes_per_step={dst_b:.0f}")
+
+
+def multifield_rows(sizes=(32, 64), g=1, T=8, n_steps=N_ITERS):
+    """C=2 wave workload through the fused resident pipeline
+    (DESIGN.md §9): steps/sec on the stacked (2, nb, T³) store, plus the
+    ×C bytes model the accounting tests pin."""
+    out = []
+    rng = np.random.default_rng(0)
+    for M in sizes:
+        fields = jnp.asarray(
+            rng.normal(size=(WAVE_FIELDS, M, M, M)).astype(np.float32))
+        for S in (1, 4):
+            for kind in ("morton", "hilbert"):
+                pipe = ResidentPipeline(M=M, T=T, g=g, kind=kind, S=S,
+                                        rule="wave")
+                run = pipe.run_fn(n_steps)
+                jax.block_until_ready(run(pipe.to_blocks(fields)))  # warm
+                store = pipe.to_blocks(fields)
+                t0 = time.perf_counter()
+                jax.block_until_ready(run(store))
+                dt = time.perf_counter() - t0
+                out.append((
+                    f"multifield/update_M{M}_g{g}_T{T}_S{S}"
+                    f"_C{WAVE_FIELDS}_{kind}",
+                    dt * 1e6 / n_steps,
+                    f"steps_per_s={n_steps / dt:.1f};"
+                    + multifield_derived(M, T, g, S, n_steps),
                 ))
     return out
 

@@ -20,6 +20,13 @@ exchange rings, shell-block boundary fill — and the modelled ICI
 savings table prints for both boundary contracts (mesh-edge shards
 skip the wrap links, so clamped shards move strictly fewer wire bytes).
 
+Part 3 (parent process): the multi-field store (DESIGN.md §9) — the
+C=2 FDTD-style wave rule rides the same fused resident pipeline at
+S ∈ {2, 4}, bit-identical to its sequential global oracle
+(kernels/ref.fields_step_ref), and the ×C bytes-model table prints the
+2-field stream next to the PR 2/3 single-field numbers: HBM and ICI
+both scale by exactly C, never more.
+
 Run: PYTHONPATH=src python examples/stencil_halo_demo.py
 (docs/quickstart.md walks through the output.)
 """
@@ -80,6 +87,59 @@ def resident_demo(M=32, g=1, T=8, steps=10, S=4):
               f"bit-identical: {ok}")
         assert ok
     print("resident pipeline OK")
+
+def wave_demo(M=32, g=1, T=8, steps=8):
+    """Part 3: the C=2 wave workload on the multi-field block store."""
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as kref
+    from repro.kernels.ops import uniform_weights
+    from repro.stencil import (ResidentPipeline, distributed_bytes_per_step,
+                               exchange_bytes_per_step,
+                               resident_bytes_per_step)
+
+    C = 2
+    print(f"[stencil_halo_demo] multi-field wave (C={C}), M={M} g={g} T={T} "
+          f"K={steps} steps")
+    rng = np.random.default_rng(0)
+    fields = jnp.asarray(rng.normal(size=(C, M, M, M)).astype(np.float32))
+    w = uniform_weights(g)
+    want = fields
+    for _ in range(steps):
+        want = kref.fields_step_ref(want, w, g, rule="wave")
+    want = np.asarray(want)
+    for S in (2, 4):
+        pipe = ResidentPipeline(M=M, T=T, g=g, kind="hilbert", S=S,
+                                rule="wave")
+        run = pipe.run_fn(steps)
+        jax.block_until_ready(run(pipe.to_blocks(fields)))  # warm
+        store = pipe.to_blocks(fields)
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(run(store))
+        dt = time.perf_counter() - t0
+        ok = np.array_equal(np.asarray(pipe.to_cube(out)), want)
+        print(f"  wave fused S={S}: {dt * 1e3 / steps:6.1f} ms/step  "
+              f"bit-identical to sequential oracle: {ok}")
+        assert ok
+    # the xC bytes model next to the PR 2/3 single-field numbers
+    print(f"  modelled bytes/substep (M={M}, T={T}, g={g}): "
+          "single-field vs C=2")
+    print("    S   HBM C=1     HBM C=2     ICI C=1     ICI C=2    ratio")
+    for S in (1, 2, 4):
+        h1 = resident_bytes_per_step(M, T, g, steps, S=S)
+        h2 = resident_bytes_per_step(M, T, g, steps, S=S, fields=C)
+        i1 = exchange_bytes_per_step(M, g, S)
+        i2 = exchange_bytes_per_step(M, g, S, fields=C)
+        d2 = distributed_bytes_per_step(M, T, g, steps, S=S, fields=C)
+        print(f"    {S}  {h1 / 1e6:7.2f} MB {h2 / 1e6:8.2f} MB "
+              f"{i1 / 1e3:8.1f} KB {i2 / 1e3:8.1f} KB   x{h2 / h1:.2f} "
+              f"(dist C=2 {d2 / 1e6:.2f} MB)")
+    print("multi-field wave OK")
+
 
 _WORKER = r"""
 import os
@@ -163,6 +223,7 @@ def main():
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     sys.path.insert(0, env["PYTHONPATH"])
     resident_demo()
+    wave_demo()
     print("[stencil_halo_demo] launching 8-device subprocess...")
     r = subprocess.run([sys.executable, "-c", _WORKER], env=env)
     raise SystemExit(r.returncode)

@@ -18,7 +18,7 @@ from .surfaces import (  # noqa: F401
 )
 from .layout import (  # noqa: F401
     apply_ordering, undo_ordering, blockize, unblockize, blockize_with_halo,
-    block_order,
+    blockize_fields, unblockize_fields, block_order,
 )
 from .neighbors import (  # noqa: F401
     OFFSETS_FULL, OFFSETS_FACE, FACE_COLS, SELF_COL,
@@ -26,5 +26,6 @@ from .neighbors import (  # noqa: F401
     neighbor_table_device, ring_perms,
 )
 from .boundary import (  # noqa: F401
-    BoundarySpec, PERIODIC, NEUMANN0, dirichlet, as_boundary, pad_cube,
+    BoundarySpec, MixedBoundary, PERIODIC, NEUMANN0, dirichlet, mixed,
+    as_boundary, axes_periodic, pad_cube,
 )

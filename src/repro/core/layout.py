@@ -23,7 +23,7 @@ from .orderings import OrderingSpec, path_to_rmo, rmo_to_path, _check_pow2, _fla
 __all__ = [
     "apply_ordering", "undo_ordering", "device_constant",
     "block_order", "blockize", "unblockize", "blockize_with_halo",
-    "store_spec",
+    "blockize_fields", "unblockize_fields", "store_spec",
 ]
 
 
@@ -159,6 +159,38 @@ def unblockize(blocks: jnp.ndarray, M: int, kind: str = "morton") -> jnp.ndarray
     x6 = blocks[_block_perm_device(kind, nt, True)]
     x6 = x6.reshape(nt, nt, nt, T, T, T).transpose(0, 3, 1, 4, 2, 5)
     return x6.reshape(M, M, M)
+
+
+def blockize_fields(fields: jnp.ndarray, T: int,
+                    kind: str = "morton") -> jnp.ndarray:
+    """(C,M,M,M) stacked fields -> (C, nb, T, T, T) multi-field block store.
+
+    The C-channel store of DESIGN.md §9: every channel shares **one**
+    block permutation (the ``kind`` curve over the nt³ block grid), so
+    the whole multi-field state is curve-ordered by a single gather and
+    the per-block neighbour/boundary tables apply to all channels alike.
+    A 3-D input is promoted to C=1 and returned as ``(1, nb, T, T, T)``.
+    """
+    if fields.ndim == 3:
+        fields = fields[None]
+    C, M = fields.shape[0], fields.shape[1]
+    nt = M // T
+    assert fields.shape == (C, M, M, M), fields.shape
+    assert nt * T == M, (M, T)
+    x7 = fields.reshape(C, nt, T, nt, T, nt, T).transpose(0, 1, 3, 5, 2, 4, 6)
+    flat = x7.reshape(C, nt ** 3, T, T, T)
+    return jnp.take(flat, _block_perm_device(kind, nt, False), axis=1)
+
+
+def unblockize_fields(store: jnp.ndarray, M: int,
+                      kind: str = "morton") -> jnp.ndarray:
+    """Inverse of :func:`blockize_fields`: (C, nb, T³) -> (C, M, M, M)."""
+    C, nb, T = store.shape[0], store.shape[1], store.shape[2]
+    nt = M // T
+    assert nb == nt ** 3, (store.shape, M)
+    x7 = jnp.take(store, _block_perm_device(kind, nt, True), axis=1)
+    x7 = x7.reshape(C, nt, nt, nt, T, T, T).transpose(0, 1, 4, 2, 5, 3, 6)
+    return x7.reshape(C, M, M, M)
 
 
 def blockize_with_halo(x: jnp.ndarray, T: int, g: int, kind: str = "morton",

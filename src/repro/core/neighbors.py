@@ -60,10 +60,21 @@ def block_kind_of(spec: OrderingSpec | str) -> str:
     return spec.kind
 
 
-@functools.lru_cache(maxsize=128)
+def _periodic_axes(periodic) -> tuple[bool, bool, bool]:
+    """Normalise the ``periodic`` knob: a bool applies to all three axes,
+    a 3-sequence gives the per-axis wrap flags (mixed boundary contracts,
+    core.boundary.axes_periodic — DESIGN.md §8)."""
+    if isinstance(periodic, bool):
+        return (periodic,) * 3
+    per = tuple(bool(p) for p in periodic)
+    if len(per) != 3:
+        raise ValueError(f"periodic must be a bool or 3 flags, got {periodic!r}")
+    return per
+
+
 def neighbor_table(spec: OrderingSpec | str, nt: int, *,
                    connectivity: str = "full",
-                   periodic: bool = True) -> np.ndarray:
+                   periodic=True) -> np.ndarray:
     """Path-position → neighbour path-positions, int32, read-only.
 
     spec:         OrderingSpec or block-kind string (see block_kind_of)
@@ -74,11 +85,24 @@ def neighbor_table(spec: OrderingSpec | str, nt: int, *,
                   block (note: block-level clamping replicates *blocks*,
                   not elements — it matches jnp.pad(mode="edge") only for
                   the face-adjacent halo layer, which is what the
-                  distributed exchange consumes).
+                  distributed exchange consumes). A per-axis 3-tuple of
+                  flags realises mixed contracts (clamped k, periodic
+                  i/j — core.boundary.MixedBoundary): each axis wraps or
+                  clamps independently.
 
     ``table[t, o]`` is the path position of the block at offset
     ``OFFSETS[o]`` from the block the curve visits at position ``t``.
     """
+    # normalise before the cache: lists/tuples of flags both hit one key
+    # (and bad inputs raise the friendly ValueError, not lru_cache's)
+    return _neighbor_table_cached(spec, nt, connectivity,
+                                  _periodic_axes(periodic))
+
+
+@functools.lru_cache(maxsize=128)
+def _neighbor_table_cached(spec: OrderingSpec | str, nt: int,
+                           connectivity: str,
+                           periodic: tuple[bool, bool, bool]) -> np.ndarray:
     if connectivity not in ("full", "face"):
         raise ValueError(f"unknown connectivity {connectivity!r}")
     kind = block_kind_of(spec)
@@ -91,7 +115,8 @@ def neighbor_table(spec: OrderingSpec | str, nt: int, *,
 
 
 @functools.lru_cache(maxsize=128)
-def _full_table(kind: str, nt: int, periodic: bool) -> np.ndarray:
+def _full_table(kind: str, nt: int,
+                periodic: tuple[bool, bool, bool]) -> np.ndarray:
     bo = block_order(kind, nt)  # (nb, 3): path pos -> block coords
     nb = nt ** 3
     lin = bo[:, 0] * nt * nt + bo[:, 1] * nt + bo[:, 2]
@@ -99,10 +124,11 @@ def _full_table(kind: str, nt: int, periodic: bool) -> np.ndarray:
     lin_to_path[lin] = np.arange(nb)
     offs = np.asarray(OFFSETS_FULL, dtype=np.int64)  # (27, 3)
     co = bo[:, None, :] + offs[None, :, :]           # (nb, 27, 3)
-    if periodic:
-        co %= nt
-    else:
-        np.clip(co, 0, nt - 1, out=co)
+    for ax in range(3):
+        if periodic[ax]:
+            co[..., ax] %= nt
+        else:
+            np.clip(co[..., ax], 0, nt - 1, out=co[..., ax])
     tab = lin_to_path[(co[..., 0] * nt + co[..., 1]) * nt + co[..., 2]]
     tab = tab.astype(np.int32)
     tab.setflags(write=False)
@@ -111,13 +137,14 @@ def _full_table(kind: str, nt: int, periodic: bool) -> np.ndarray:
 
 def neighbor_table_device(spec: OrderingSpec | str, nt: int, *,
                           connectivity: str = "full",
-                          periodic: bool = True) -> jnp.ndarray:
+                          periodic=True) -> jnp.ndarray:
     """Cached device-resident copy (the kernel's scalar-prefetch operand)."""
     kind = block_kind_of(spec)
+    per = _periodic_axes(periodic)
     return device_constant(
-        ("nbrtab", kind, nt, connectivity, periodic),
+        ("nbrtab", kind, nt, connectivity, per),
         lambda: neighbor_table(kind, nt, connectivity=connectivity,
-                               periodic=periodic))
+                               periodic=per))
 
 
 def shell_block_count(nt: int) -> int:

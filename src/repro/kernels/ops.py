@@ -114,10 +114,15 @@ def sfc_gather_take(data: jnp.ndarray, idx: np.ndarray, *, line: int = 64,
     is the modelled HBM traffic — SFC layouts need fewer rows (paper
     Figs 11/15 re-expressed). Exact for any idx. ``plan_key`` (hashable,
     identifying idx's provenance) memoises the row plan across calls.
+
+    The fallback path gathers along the *last* axis, so a stacked
+    multi-field ``(C, M³)`` state (DESIGN.md §9) packs all channels in
+    one call; the kernel path stays 1-D (per-channel).
     """
     idx = np.asarray(idx)
     if not use_kernel:
-        return jnp.take(data, jnp.asarray(idx))
+        return jnp.take(data, jnp.asarray(idx), axis=-1)
+    assert data.ndim == 1, "kernel gather path is 1-D (pack per channel)"
     n = data.shape[0]
     assert n % line == 0, (n, line)
     rows, pos = _row_plan(idx, line, plan_key)
@@ -131,8 +136,10 @@ def pack_surface(data_path: jnp.ndarray, spec: OrderingSpec, M: int, g: int,
                  interpret: bool = True) -> jnp.ndarray:
     """Pack one face of a path-ordered cube into a contiguous buffer.
 
-    ``data_path`` is the (M³,) cube in ``spec`` order (apply_ordering).
-    Buffer order is curve-visit order p_t (paper §3.2). The row plan is
+    ``data_path`` is the (M³,) cube in ``spec`` order (apply_ordering) —
+    or the stacked multi-field ``(C, M³)`` state (DESIGN.md §9), packed
+    along the last axis so one call moves every channel's face. Buffer
+    order is curve-visit order p_t (paper §3.2). The row plan is
     cached on (spec, M, g, face, line) across calls.
 
     ``g`` is the face *width* — the communication-avoiding distributed

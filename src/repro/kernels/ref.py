@@ -12,7 +12,8 @@ from .rules import apply_window_bc, get_rule
 
 __all__ = ["stencil_sum_ref", "gol_rule_ref", "gol3d_step_ref",
            "assemble_halo_ref", "stencil_sum_resident_ref",
-           "stencil_fused_ref", "gather_rows_ref", "attention_ref"]
+           "stencil_fused_ref", "fields_step_ref", "gather_rows_ref",
+           "attention_ref"]
 
 
 def stencil_sum_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
@@ -38,17 +39,23 @@ def assemble_halo_ref(store: jnp.ndarray, nbr: jnp.ndarray, g: int) -> jnp.ndarr
     """Resident halo assembly: gather each block's (T+2g)³ window from the
     un-haloed curve-ordered store via the SFC neighbour table.
 
-    store: (nb_src, T, T, T); nbr: (nb, 27) full table (core.neighbors),
+    store: (nb_src, T, T, T) — or the stacked multi-field
+    (C, nb_src, T, T, T) store (DESIGN.md §9), whose channels share the
+    one neighbour table; nbr: (nb, 27) full table (core.neighbors),
     nb ≤ nb_src — the distributed extended store appends shell blocks
     after the core, so the table may index more blocks than it has rows;
-    returns (nb, T+2g, T+2g, T+2g). With the periodic table of the same
-    ordering this is bit-identical to layout.blockize_with_halo — the
-    jnp oracle of the in-kernel assembly in stencil3d.stencil_sum_resident.
+    returns (nb, T+2g, T+2g, T+2g) (with the leading C kept for stacked
+    input). With the periodic table of the same ordering this is
+    bit-identical to layout.blockize_with_halo — the jnp oracle of the
+    in-kernel assembly in stencil3d.stencil_sum_resident.
     """
-    T = store.shape[1]
+    multi = store.ndim == 5
+    T = store.shape[-3]
     assert g <= T, (g, T)
     nbr = jnp.asarray(nbr)
-    own = store if store.shape[0] == nbr.shape[0] else store[:nbr.shape[0]]
+    lead = (slice(None),) if multi else ()
+    own = store if store.shape[-4] == nbr.shape[0] \
+        else store[lead + (slice(None, nbr.shape[0]),)]
     spans = (slice(T - g, T), slice(None), slice(0, g))  # lo, mid, hi
     slabs = []
     for a in range(3):
@@ -57,11 +64,13 @@ def assemble_halo_ref(store: jnp.ndarray, nbr: jnp.ndarray, g: int) -> jnp.ndarr
             parts = []
             for c in range(3):
                 col = a * 9 + b * 3 + c
-                src = own if col == 13 else store[nbr[:, col]]
-                parts.append(src[:, spans[a], spans[b], spans[c]])
-            planes.append(jnp.concatenate(parts, axis=3))
-        slabs.append(jnp.concatenate(planes, axis=2))
-    return jnp.concatenate(slabs, axis=1)
+                src = own if col == 13 \
+                    else store[lead + (nbr[:, col],)]
+                parts.append(src[lead + (slice(None), spans[a], spans[b],
+                                         spans[c])])
+            planes.append(jnp.concatenate(parts, axis=-1))
+        slabs.append(jnp.concatenate(planes, axis=-2))
+    return jnp.concatenate(slabs, axis=-3)
 
 
 def stencil_sum_resident_ref(store: jnp.ndarray, weights: jnp.ndarray,
@@ -81,26 +90,74 @@ def stencil_fused_ref(store: jnp.ndarray, weights: jnp.ndarray,
     computation the fused kernel performs in VMEM, vectorised over nb.
     Bit-identical (f32 stores) to S sequential resident steps. Accepts
     the distributed extended store (shell blocks appended after the
-    core, nbr rows = core only) like the kernel does.
+    core, nbr rows = core only) like the kernel does, and the stacked
+    multi-field ``(C, nb, T³)`` store (DESIGN.md §9): every substep
+    tap-sums all C channels and hands the stacked fields to the rule,
+    exactly as the kernel does.
 
     Clamped boundaries (DESIGN.md §8) mirror the kernel exactly: before
     every substep the ghost layers on faces flagged in ``bnd``
     ((nb, 6), core.neighbors.boundary_face_table column order) are
-    substituted via rules.apply_window_bc — the same shared helper.
+    substituted via rules.apply_window_bc — the same shared helper,
+    applied per channel by broadcast.
     """
     g = (weights.shape[0] - 1) // 2
     bc = as_boundary(bc)
     r = get_rule(rule)
     if bc.clamped and bnd is None:
         raise ValueError(f"bc={bc.kind!r} needs the (nb, 6) bnd flag table")
+    multi = store.ndim == 5
+    C = store.shape[0] if multi else 1
+    if C != r.channels:
+        raise ValueError(
+            f"rule {r.name!r} advances {r.channels} channel(s) but the store "
+            f"carries {C} (shape {store.shape})")
     x = assemble_halo_ref(store, nbr, S * g).astype(jnp.float32)
     for u in range(S):
         x = apply_window_bc(x, jnp.asarray(bnd), g * (S - u), bc) \
             if bc.clamped else x
-        tap = stencil_sum_ref(x, weights)
-        centre = x[:, g:-g, g:-g, g:-g]
+        if multi:
+            tap = jnp.stack([stencil_sum_ref(x[c], weights) for c in range(C)])
+            centre = x[:, :, g:-g, g:-g, g:-g]
+        else:
+            tap = stencil_sum_ref(x, weights)
+            centre = x[:, g:-g, g:-g, g:-g]
         x = r.apply(centre, tap, g)
     return x.astype(store.dtype)
+
+
+def fields_step_ref(fields: jnp.ndarray, weights: jnp.ndarray, g: int,
+                    rule: str = "gol", bc=PERIODIC) -> jnp.ndarray:
+    """One multi-field update on (C, M, M, M) canonical row-major fields.
+
+    The ordering-independent sequential oracle of the C-channel stack
+    (DESIGN.md §9): ghost-extend every channel under ``bc``
+    (core.boundary.pad_cube — per-axis for mixed contracts), accumulate
+    the weighted tap sum per channel **in the same dk,di,dj order as
+    stencil_sum_ref** (so f32 results match the blocked paths bitwise,
+    not just numerically), then apply the registry rule to the stacked
+    fields. A 3-D input is treated as C=1 and returned 3-D.
+    """
+    r = get_rule(rule)
+    squeeze = fields.ndim == 3
+    if squeeze:
+        fields = fields[None]
+    C, M = fields.shape[0], fields.shape[1]
+    assert fields.shape == (C, M, M, M), fields.shape
+    if C != r.channels:
+        raise ValueError(
+            f"rule {r.name!r} advances {r.channels} channel(s), got {C}")
+    s = weights.shape[0]
+    assert s == 2 * g + 1, (weights.shape, g)
+    xp = jnp.stack([pad_cube(fields[c], g, bc) for c in range(C)])
+    tap = jnp.zeros((C, M, M, M), dtype=jnp.float32)
+    for dk in range(s):
+        for di in range(s):
+            for dj in range(s):
+                tap = tap + weights[dk, di, dj].astype(jnp.float32) * (
+                    xp[:, dk:dk + M, di:di + M, dj:dj + M].astype(jnp.float32))
+    out = r.apply(fields.astype(jnp.float32), tap, g).astype(fields.dtype)
+    return out[0] if squeeze else out
 
 
 def gol_rule_ref(state: jnp.ndarray, neigh_sum: jnp.ndarray, g: int) -> jnp.ndarray:

@@ -1,7 +1,7 @@
-"""Update-rule registry + boundary tap substitution (DESIGN.md §4, §8).
+"""Update-rule registry + boundary tap substitution (DESIGN.md §4, §8, §9).
 
 The temporal-blocked kernel (stencil3d.stencil_step_fused) applies
-``state' = rule(state, tap_sum)`` after every in-VMEM tap sum, so the
+``fields' = rule(fields, tap_sums)`` after every in-VMEM tap sum, so the
 rule is the only workload-specific piece of the pipeline. Registering it
 here — one pure-jnp callable shared verbatim by the Pallas kernel, the
 jnp oracles (kernels/ref.py) and the fused driver
@@ -9,11 +9,21 @@ jnp oracles (kernels/ref.py) and the fused driver
 by construction and lets a new workload ride the whole resident
 machinery by adding one entry.
 
+Multi-field contract (DESIGN.md §9): a rule declares ``channels`` (C)
+and its ``apply(fields_f32, tap_sums_f32, g)`` receives the C state
+fields *stacked on a leading axis* — ``(C, ...)`` where ``...`` is the
+spatial window in the kernel, ``(nb, ...)`` in the batched oracles, or
+the canonical cube in the global reference — together with the weighted
+tap sum of **every** channel, and returns the next stacked fields. The
+classic C=1 rules (gol, jacobi, identity) are elementwise, so the same
+callables serve the stacked form bit-identically; ``wave`` (C=2) is the
+FDTD-style leapfrog workload that actually couples channels.
+
 Rules compute in float32 (the kernels' accumulation dtype); callers cast
-back to the store dtype at the step boundary. ``tap_sum`` is the
-weighted (2g+1)³ tap sum of the *current* state — with the default
-zero-centre uniform weights (ops.uniform_weights) it is the neighbour
-count/sum the classic rules expect.
+back to the store dtype at the step boundary. ``tap_sums`` is the
+weighted (2g+1)³ tap sum of the *current* state per channel — with the
+default zero-centre uniform weights (ops.uniform_weights) it is the
+neighbour count/sum the classic rules expect.
 
 :func:`apply_window_bc` is the rules' boundary companion (DESIGN.md §8):
 on clamped runs every substep's tap sum must read *boundary* values —
@@ -33,18 +43,26 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.boundary import BoundarySpec, as_boundary
+from repro.core.boundary import BoundarySpec, MixedBoundary, as_boundary
 
 __all__ = ["UpdateRule", "RULES", "get_rule", "gol_thresholds",
-           "apply_window_bc"]
+           "WAVE_KAPPA", "apply_window_bc"]
 
 
 @dataclass(frozen=True)
 class UpdateRule:
-    """name: registry key; apply(centre_f32, tap_sum_f32, g) -> next_f32."""
+    """name: registry key; apply(fields_f32, tap_sums_f32, g) -> next_f32.
+
+    ``channels`` (C) is the number of state fields the rule advances;
+    ``apply`` sees them stacked on the leading axis (C=1 rules are
+    elementwise and accept any shape unchanged). The store a rule rides
+    is ``(C, nb, T, T, T)`` — one shared block permutation, C channels
+    (DESIGN.md §9).
+    """
     name: str
     apply: Callable[[jnp.ndarray, jnp.ndarray, int], jnp.ndarray]
     doc: str = ""
+    channels: int = 1
 
 
 def gol_thresholds(g: int) -> tuple[int, int, int]:
@@ -78,10 +96,53 @@ def _identity(centre: jnp.ndarray, tap: jnp.ndarray, g: int) -> jnp.ndarray:
     return tap
 
 
+# Courant-like coupling of the wave leapfrog. A power of two, so the
+# κ·lap product is an *exact* f32 scaling — FMA contraction of
+# ``v + κ·lap`` cannot shift the rounding between compiled programs —
+# and small enough that κ·λ_max < 4 for the 26-neighbour Laplacian
+# (λ_max ≤ 2n with n = 26): the leapfrog stays stable, state bounded.
+WAVE_KAPPA = 0.03125  # 2**-5
+
+
+def _wave(fields: jnp.ndarray, taps: jnp.ndarray, g: int) -> jnp.ndarray:
+    """FDTD-style 2-field wave leapfrog (DESIGN.md §9): u is the
+    displacement, v the velocity. The Laplacian comes from the uniform
+    zero-centre tap sum: lap u = Σ_neigh u - n·u; then
+
+        v' = v + κ · lap u        (kick)
+        u' = u + v'               (drift)
+
+    — symplectic Euler on the semi-discrete wave equation. v's tap sum
+    arrives (the kernel computes all C channels, the ×C bytes model
+    counts it) but the rule does not consume it.
+
+    ``n·u`` is subtracted as a sum of power-of-two multiples (16u, 8u,
+    2u for g=1): every product is an exact f32 scaling, so XLA's FMA
+    contraction cannot shift a rounding between compiled programs and
+    the rule stays bit-identical across every pipeline form — the same
+    reproducibility contract the integer-valued gol rule gets for free.
+    """
+    n = (2 * g + 1) ** 3 - 1
+    u, v = fields[0], fields[1]
+    lap = taps[0]
+    bit = 1 << (n.bit_length() - 1)
+    rem = n
+    while bit:
+        if rem >= bit:
+            lap = lap - jnp.float32(bit) * u
+            rem -= bit
+        bit >>= 1
+    v2 = v + jnp.float32(WAVE_KAPPA) * lap
+    u2 = u + v2
+    return jnp.stack([u2, v2])
+
+
 RULES: dict[str, UpdateRule] = {
     "gol": UpdateRule("gol", _gol, "generalised 3D Game of Life (paper §4)"),
     "jacobi": UpdateRule("jacobi", _jacobi, "Jacobi/heat box-filter relaxation"),
     "identity": UpdateRule("identity", _identity, "raw weighted stencil sum"),
+    "wave": UpdateRule("wave", _wave,
+                       "FDTD-style 2-field wave leapfrog (u, v)", channels=2),
 }
 
 
@@ -93,12 +154,14 @@ def _plane(x: jnp.ndarray, axis: int, i: int) -> jnp.ndarray:
 
 
 def apply_window_bc(x: jnp.ndarray, flags, depth: int,
-                    bc: BoundarySpec | str) -> jnp.ndarray:
+                    bc: BoundarySpec | MixedBoundary | str) -> jnp.ndarray:
     """Substitute boundary values into a window's ghost layers.
 
     x:      a stencil window whose last three axes span the spatial
-            extent — ``(E, E, E)`` inside the fused kernel, or
-            ``(nb, E, E, E)`` in the batched jnp oracle.
+            extent — ``(E, E, E)`` or ``(C, E, E, E)`` inside the fused
+            kernel, ``(nb, E, E, E)`` / ``(C, nb, E, E, E)`` in the
+            batched jnp oracles. All leading axes (channels, blocks)
+            broadcast: the contract applies to every channel alike.
     flags:  which of the window's six faces are clamped *domain* faces,
             in ``core.neighbors.OFFSETS_FACE`` order [k-,k+,i-,i+,j-,j+]
             — a ``(6,)``/``(nb, 6)`` int array, or a sequence of six
@@ -107,7 +170,10 @@ def apply_window_bc(x: jnp.ndarray, flags, depth: int,
             flagged face are outside the physical domain.
     bc:     the contract (core.boundary): dirichlet writes the constant,
             neumann0 replicates the adjacent domain-edge plane; periodic
-            is a no-op (ghost data arrives by wrap/exchange instead).
+            is a no-op (ghost data arrives by wrap/exchange instead). A
+            ``MixedBoundary`` applies its own spec per axis — periodic
+            axes are skipped entirely, so their ghost layers keep the
+            wrapped/exchanged data.
 
     Axes are refreshed sequentially (k, then i, then j) so corner ghost
     regions compose exactly like ``jnp.pad``'s per-axis semantics — the
@@ -132,10 +198,13 @@ def apply_window_bc(x: jnp.ndarray, flags, depth: int,
         return f[..., None, None, None] if batch else f
 
     for ax in range(3):
+        ax_bc = bc.axes[ax]
+        if not ax_bc.clamped:
+            continue
         axis = ax - 3
         iota = jax.lax.broadcasted_iota(jnp.int32, x.shape[-3:], ax)
-        if bc.kind == "dirichlet":
-            lo_fill = hi_fill = jnp.asarray(bc.value, x.dtype)
+        if ax_bc.kind == "dirichlet":
+            lo_fill = hi_fill = jnp.asarray(ax_bc.value, x.dtype)
         else:  # neumann0: replicate the nearest in-domain plane
             lo_fill = _plane(x, axis, depth)
             hi_fill = _plane(x, axis, E - 1 - depth)

@@ -36,13 +36,22 @@ launches; per substep the HBM stream drops from
 Reissmann & Jahre, paid for with redundant boundary flops.
 
 Boundary contract (DESIGN.md §8): ``stencil_step_fused`` takes a
-``core.boundary.BoundarySpec`` plus a second scalar-prefetched
-``(nb, 6)`` table of per-block clamped-face flags; before every substep
-the flagged ghost layers are substituted with boundary values
-(rules.apply_window_bc), so physical domains temporally block exactly
-as deep as periodic ones. ``stencil_sum_blocks``/``stencil_sum_resident``
-stay periodic-only baselines (the repack form realises clamped runs by
-padding at blockize time instead).
+``core.boundary`` contract (uniform or per-axis mixed) plus a second
+scalar-prefetched ``(nb, 6)`` table of per-block clamped-face flags;
+before every substep the flagged ghost layers are substituted with
+boundary values (rules.apply_window_bc), so physical domains temporally
+block exactly as deep as periodic ones.
+``stencil_sum_blocks``/``stencil_sum_resident`` stay periodic-only
+baselines (the repack form realises clamped runs by padding at blockize
+time instead).
+
+Multi-field stores (DESIGN.md §9): a rule that declares C > 1 channels
+(``wave``) rides the stacked ``(C, nb, T³)`` store — the 27 piece specs
+gain a whole-store channel dimension, one grid step assembles C windows,
+tap-sums every channel, applies the rule to the stacked fields, and
+writes C tiles. C=1 stores keep the original 4-D kernel program
+byte-for-byte (bit-identity of the scalar rules to their pre-§9 runs is
+load-bearing: XLA's contraction choices shift with rank).
 
 VMEM budget: ``4B·(2·(T+2Sg)³ + 2·T³ + (2g+1)³)`` — e.g. T=8, g=1, S=4
 → ~37 KiB; the ``plan()`` autotuner in stencil/pipeline.py picks (T, S)
@@ -63,7 +72,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.boundary import PERIODIC, BoundarySpec, as_boundary
+from repro.core.boundary import (PERIODIC, BoundarySpec, MixedBoundary,
+                                 as_boundary)
 
 from .rules import apply_window_bc, get_rule
 
@@ -132,19 +142,24 @@ def stencil_sum_blocks(blocks: jnp.ndarray, weights: jnp.ndarray, *,
 def _assemble_window(refs) -> jnp.ndarray:
     """Concatenate 27 piece refs (OFFSETS_FULL order) into one f32 window.
 
-    Piece (a,b,c) has shape (1, sz[a], sz[b], sz[c]) with sz = (h, T, h):
-    low halo, centre span, high halo along each axis (h = halo width).
+    Piece (a,b,c) has shape (1, sz[a], sz[b], sz[c]) with sz = (h, T, h)
+    — or ``(C, 1, sz[a], sz[b], sz[c])`` in the multi-field store, where
+    the leading channel axis rides along (DESIGN.md §9): low halo, centre
+    span, high halo along each axis (h = halo width). Returns
+    ``(T+2h,)³`` or ``(C, (T+2h)³…)`` accordingly — concatenation is on
+    the last three (spatial) axes either way.
     """
-    pieces = [r[0].astype(jnp.float32) for r in refs]
+    pieces = [(r[0] if len(r.shape) == 4 else r[:, 0]).astype(jnp.float32)
+              for r in refs]
     slabs = []
     n = 0
     for _a in range(3):
         planes = []
         for _b in range(3):
-            planes.append(jnp.concatenate(pieces[n:n + 3], axis=2))
+            planes.append(jnp.concatenate(pieces[n:n + 3], axis=-1))
             n += 3
-        slabs.append(jnp.concatenate(planes, axis=1))
-    return jnp.concatenate(slabs, axis=0)  # (T+2h, T+2h, T+2h)
+        slabs.append(jnp.concatenate(planes, axis=-2))
+    return jnp.concatenate(slabs, axis=-3)
 
 
 def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
@@ -154,20 +169,26 @@ def _resident_kernel(nbr_ref, w_ref, *refs, T: int, s: int):
     o_ref[0] = _tap_sum(x, w_ref, T, s)
 
 
-def _piece_index(i, nbr_ref, *_extra_prefetch, col: int, bidx: tuple):
+def _piece_index(i, nbr_ref, *_extra_prefetch, col: int, bidx: tuple,
+                 channels: bool = False):
     # nbr_ref[i, col] is the path position of the neighbour block this
     # piece is sliced from; bidx addresses the slice in block-shape units.
     # Extra scalar-prefetch refs (the fused kernel's bnd flags) don't
-    # steer piece addressing.
-    return (nbr_ref[i, col],) + bidx
+    # steer piece addressing. Multi-field stores carry a leading channel
+    # axis whose single block always sits at index 0.
+    idx = (nbr_ref[i, col],) + bidx
+    return (0,) + idx if channels else idx
 
 
-def _piece_specs(T: int, h: int) -> list:
+def _piece_specs(T: int, h: int, channels: int | None = None) -> list:
     """The 27 neighbour-slice BlockSpecs for a halo of width h (h | T).
 
     Piece extent per axis is (h, T, h) — low halo, centre, high halo —
     and the low piece reads the neighbour's *last* h-slab while centre
     and high read from its first, addressed in block-shape units.
+    ``channels=C`` prepends the whole-store channel axis of the
+    multi-field ``(C, nb, T³)`` store (DESIGN.md §9) to every piece, so
+    one grid step streams the window of all C fields.
     """
     sz = (h, T, h)
     last = (T // h - 1, 0, 0)
@@ -176,10 +197,14 @@ def _piece_specs(T: int, h: int) -> list:
         for b in range(3):
             for c in range(3):
                 col = a * 9 + b * 3 + c
+                shape = (1, sz[a], sz[b], sz[c])
+                if channels is not None:
+                    shape = (channels,) + shape
                 specs.append(pl.BlockSpec(
-                    (1, sz[a], sz[b], sz[c]),
+                    shape,
                     functools.partial(_piece_index, col=col,
-                                      bidx=(last[a], last[b], last[c]))))
+                                      bidx=(last[a], last[b], last[c]),
+                                      channels=channels is not None)))
     return specs
 
 
@@ -226,32 +251,44 @@ def stencil_sum_resident(store: jnp.ndarray, weights: jnp.ndarray,
 # ------------------------------------------------------- temporal-blocked form
 
 def _fused_kernel(nbr_ref, bnd_ref, w_ref, *refs, T: int, s: int, g: int,
-                  S: int, rule, bc: BoundarySpec):
+                  S: int, rule, bc):
     """S substeps of tap-sum + update rule, entirely in VMEM.
 
-    The assembled window starts at (T+2·S·g)³ and shrinks by g per side
-    each substep — boundary sites are recomputed redundantly instead of
-    re-read from HBM (DESIGN.md §4). Nothing intermediate (tap sums,
-    partial states) ever touches HBM; the single write is the T³ tile.
+    The assembled window starts at (C, (T+2·S·g)³) and shrinks by g per
+    side each substep — boundary sites are recomputed redundantly instead
+    of re-read from HBM (DESIGN.md §4). Nothing intermediate (tap sums,
+    partial states) ever touches HBM; the single write is the C·T³ tile.
+    Every substep tap-sums **all C channels** and hands the stacked
+    fields to the rule (DESIGN.md §9) — C=1 rules see a leading axis of
+    one, bit-identical to the scalar form.
 
     Clamped runs (DESIGN.md §8): before every substep, the outer
     ``g·(S-u)`` ghost layers on faces flagged in ``bnd_ref`` (the second
     scalar-prefetch operand) are substituted with boundary values —
-    dirichlet constants or the replicated domain-edge plane — so domain
-    sites only ever consume valid taps and clamped faces temporally
-    block exactly as deep as periodic ones.
+    dirichlet constants or the replicated domain-edge plane, per channel
+    — so domain sites only ever consume valid taps and clamped faces
+    temporally block exactly as deep as periodic ones.
     """
     o_ref = refs[-1]
-    x = _assemble_window(refs[:-1])  # (T+2·S·g,)³ f32
+    x = _assemble_window(refs[:-1])  # (T+2·S·g,)³ f32, or (C, …) stacked
+    multi = x.ndim == 4
     i = pl.program_id(0)
     flags = tuple(bnd_ref[i, c] for c in range(6))
     for u in range(S):
         x = apply_window_bc(x, flags, g * (S - u), bc)
         out_e = T + 2 * g * (S - 1 - u)      # window edge after this substep
-        tap = _tap_sum(x, w_ref, out_e, s)
-        centre = x[g:g + out_e, g:g + out_e, g:g + out_e]
+        if multi:
+            tap = jnp.stack([_tap_sum(x[c], w_ref, out_e, s)
+                             for c in range(x.shape[0])])
+            centre = x[:, g:g + out_e, g:g + out_e, g:g + out_e]
+        else:
+            tap = _tap_sum(x, w_ref, out_e, s)
+            centre = x[g:g + out_e, g:g + out_e, g:g + out_e]
         x = rule.apply(centre, tap, g)
-    o_ref[0] = x.astype(o_ref.dtype)
+    if multi:
+        o_ref[:, 0] = x.astype(o_ref.dtype)
+    else:
+        o_ref[0] = x.astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit,
@@ -259,33 +296,39 @@ def _fused_kernel(nbr_ref, bnd_ref, w_ref, *refs, T: int, s: int, g: int,
 def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
                        nbr: jnp.ndarray, bnd: jnp.ndarray | None = None,
                        *, g: int, S: int = 1, rule: str = "gol",
-                       bc: BoundarySpec | str = PERIODIC,
+                       bc: BoundarySpec | MixedBoundary | str = PERIODIC,
                        interpret: bool = True) -> jnp.ndarray:
     """S fused timesteps over the resident store, one HBM round-trip.
 
-    store:   (nb_src, T, T, T) — SFC-ordered, no halo duplication,
-             persists across launches (stencil/pipeline.ResidentPipeline).
-             May hold *more* blocks than the grid computes: the
-             distributed pipeline appends exchanged shell blocks after
-             the core store (core/neighbors.extended_neighbor_table) and
-             the kernel only writes the nbr-indexed core.
+    store:   (nb_src, T, T, T) — or the multi-field ``(C, nb_src, T³)``
+             stacked store (DESIGN.md §9) when the rule declares C > 1 —
+             SFC-ordered, no halo duplication, persists across launches
+             (stencil/pipeline.ResidentPipeline). May hold *more* blocks
+             than the grid computes: the distributed pipeline appends
+             exchanged shell blocks after the core store
+             (core/neighbors.extended_neighbor_table) and the kernel
+             only writes the nbr-indexed core. All C channels share the
+             one block permutation, neighbour table and grid: one grid
+             step assembles C windows and writes C tiles.
     weights: (2g+1, 2g+1, 2g+1) tap weights (ops.uniform_weights for the
-             classic neighbour-count rules)
+             classic neighbour-count rules), shared by every channel
     nbr:     (nb, 27) int32 neighbour table (core.neighbors — periodic,
-             clamped, or extended), scalar-prefetched; nb ≤ nb_src, and
-             column SELF_COL must be the row index (the builders
-             guarantee it)
+             clamped, mixed, or extended), scalar-prefetched; nb ≤
+             nb_src, and column SELF_COL must be the row index (the
+             builders guarantee it)
     bnd:     (nb, 6) int32 clamped-domain-face flags per block, OFFSETS_FACE
              column order (core.neighbors.boundary_face_table; the
              distributed pipeline masks it by mesh position). Required
              when ``bc`` is clamped; ignored (may be None) for periodic.
     g:       stencil radius; S: substeps per launch; rule: kernels/rules.py
-             registry key ("gol" | "jacobi" | "identity")
-    bc:      boundary contract (core.boundary.BoundarySpec or its kind
-             string): "periodic" (default) | "dirichlet" | "neumann0"
-    returns: (nb, T, T, T) in store dtype — bit-identical (for f32
-             stores) to S sequential resident steps of the same rule and
-             boundary.
+             registry key ("gol" | "jacobi" | "identity" | "wave") — the
+             rule's declared ``channels`` must match the store's C
+    bc:      boundary contract (core.boundary): "periodic" (default) |
+             "dirichlet" | "neumann0" | a per-axis ``MixedBoundary``,
+             applied to every channel alike
+    returns: same shape as ``store``'s computed core, in store dtype —
+             bit-identical (for f32 stores) to S sequential resident
+             steps of the same rule and boundary.
 
     Halo pieces have extent S·g and are addressed in block-shape units,
     so S·g must divide T (deep temporal blocking needs S·g ≤ T: the
@@ -293,10 +336,18 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
     in f32; non-f32 stores would round once per launch instead of once
     per step, so bit-identity to the sequential path is f32-only.
     """
-    nb_src, T = store.shape[0], store.shape[1]
+    r = get_rule(rule)
+    multi = store.ndim == 5
+    C = store.shape[0] if multi else 1
+    if C != r.channels:
+        raise ValueError(
+            f"rule {r.name!r} advances {r.channels} channel(s) but the store "
+            f"carries {C} (shape {store.shape}); stack the fields on the "
+            "leading axis (core.layout.blockize_fields)")
+    nb_src, T = store.shape[-4], store.shape[-3]
     s = 2 * g + 1
     bc = as_boundary(bc)
-    assert store.shape == (nb_src, T, T, T), store.shape
+    assert store.shape[-4:] == (nb_src, T, T, T), store.shape
     assert weights.shape == (s, s, s), (weights.shape, s)
     nb = nbr.shape[0]
     assert nbr.shape == (nb, 27) and nb <= nb_src, (nbr.shape, store.shape)
@@ -312,18 +363,25 @@ def stencil_step_fused(store: jnp.ndarray, weights: jnp.ndarray,
     assert bnd.shape == (nb, 6), bnd.shape
 
     in_specs = [pl.BlockSpec((s, s, s), lambda i, nbr_ref, bnd_ref: (0, 0, 0))]
-    in_specs += _piece_specs(T, h)
+    in_specs += _piece_specs(T, h, channels=C if multi else None)
+    if multi:
+        out_shape = jax.ShapeDtypeStruct((C, nb, T, T, T), store.dtype)
+        out_spec = pl.BlockSpec((C, 1, T, T, T),
+                                lambda i, nbr_ref, bnd_ref: (0, i, 0, 0, 0))
+    else:
+        out_shape = jax.ShapeDtypeStruct((nb, T, T, T), store.dtype)
+        out_spec = pl.BlockSpec((1, T, T, T),
+                                lambda i, nbr_ref, bnd_ref: (i, 0, 0, 0))
     kern = functools.partial(_fused_kernel, T=T, s=s, g=g, S=S,
-                             rule=get_rule(rule), bc=bc)
+                             rule=r, bc=bc)
     return pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((nb, T, T, T), store.dtype),
+        out_shape=out_shape,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(nb,),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, T, T, T),
-                                   lambda i, nbr_ref, bnd_ref: (i, 0, 0, 0)),
+            out_specs=out_spec,
         ),
         interpret=interpret,
     )(nbr.astype(jnp.int32), bnd.astype(jnp.int32), weights, *([store] * 27))

@@ -18,14 +18,23 @@ kernel — or its jnp oracle — advances S whole timesteps per HBM
 round-trip with no per-step ``undo_ordering``/``apply_ordering`` and no
 canonical-cube materialisation, ever.
 
+Multi-field stores (DESIGN.md §9): a C-channel workload keeps its state
+as the stacked ``(C, nb, T, T, T)`` store. All C channels share one
+block permutation and one set of face index lists, so a deep exchange
+packs **every channel** into the same six messages — per-axis ICI
+extents simply gain the ×C factor — and the shell scatter/extended
+store carry the stacked axis through to the fused kernel unchanged.
+
 On a TPU torus with Hilbert device ordering (launch/mesh.py) the six
 ppermutes are single-hop ICI transfers.
 
 Physical (clamped) boundaries — DESIGN.md §8: under a clamped
-``core.boundary.BoundarySpec`` the rings are open (no wrap pairs, so no
+``core.boundary`` contract the rings are open (no wrap pairs, so no
 ICI traffic across domain faces), mesh-edge shards fill their unserved
 shell slabs with boundary values, and the fused substeps refresh ghost
-layers per substep from the shard's mesh-masked block flags.
+layers per substep from the shard's mesh-masked block flags. A per-axis
+``MixedBoundary`` opens only its clamped axes: periodic axes keep their
+full rings, and the jaxpr carries ppermute pairs for those axes alone.
 """
 
 from __future__ import annotations
@@ -39,7 +48,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core import OrderingSpec, path_to_rmo, rmo_to_path
-from repro.core.boundary import PERIODIC, BoundarySpec, as_boundary
+from repro.core.boundary import (PERIODIC, BoundarySpec, MixedBoundary,
+                                 as_boundary, axes_periodic)
 from repro.core.cache_model import face_mask
 from repro.core.layout import device_constant, store_spec
 from repro.core.neighbors import (block_kind_of, boundary_face_table_device,
@@ -49,6 +59,7 @@ from repro.core.surfaces import shell_slab_positions, shell_slab_shapes
 from repro.kernels import ops
 from repro.kernels import ref as kref
 from repro.kernels.ops import uniform_weights
+from repro.kernels.rules import get_rule
 from repro.kernels.stencil3d import stencil_step_fused
 
 from .domain import STENCIL_AXES
@@ -103,10 +114,12 @@ def _slab_scatter_device(spec: OrderingSpec, M: int, h: int, face: str):
 
 
 def _pack_to_slab(store_flat, hspec, M, h, face, shape):
-    """Pack one deep face from the store, in canonical slab layout."""
-    buf = ops.pack_surface(store_flat, hspec, M, h, face)
+    """Pack one deep face from the (C, nb·T³) store, canonical slab layout."""
+    buf = ops.pack_surface(store_flat, hspec, M, h, face)  # (C, L)
     pos = _slab_scatter_device(hspec, M, h, face)
-    return jnp.zeros(h * M * M, buf.dtype).at[pos].set(buf).reshape(shape)
+    C = store_flat.shape[0]
+    return jnp.zeros((C, h * M * M), buf.dtype).at[:, pos].set(buf) \
+        .reshape((C,) + shape)
 
 
 def _unpack_recv(buf, hspec, M, h, face, shape):
@@ -114,7 +127,9 @@ def _unpack_recv(buf, hspec, M, h, face, shape):
     canonical slab — sender and receiver share the index lists, so the
     receiver knows the order the remote pack produced."""
     pos = _slab_scatter_device(hspec, M, h, face)
-    return jnp.zeros(h * M * M, buf.dtype).at[pos].set(buf).reshape(shape)
+    C = buf.shape[0]
+    return jnp.zeros((C, h * M * M), buf.dtype).at[:, pos].set(buf) \
+        .reshape((C,) + shape)
 
 
 def _bc_face_fill(face: jnp.ndarray, axis: int, side: str,
@@ -122,16 +137,19 @@ def _bc_face_fill(face: jnp.ndarray, axis: int, side: str,
     """Boundary values for one shell slab of a clamped domain face.
 
     ``face`` is the slab the shard *would* send outward on that side
-    (own deep face, already carrying any previously-filled edge data);
-    the returned array is what a mesh-edge shard holds in the ghost slab
-    instead of exchanged data: the dirichlet constant, or — neumann0 —
-    the outermost in-domain plane of ``face`` replicated across the
-    slab's ``h`` width (clamp-copy).
+    (own deep face, already carrying any previously-filled edge data,
+    with the leading channel axis); ``axis`` indexes the *spatial* axis
+    (0..2) and ``bc`` is that axis's own contract (mixed runs pass each
+    axis's spec). The returned array is what a mesh-edge shard holds in
+    the ghost slab instead of exchanged data: the dirichlet constant, or
+    — neumann0 — the outermost in-domain plane of ``face`` replicated
+    across the slab's ``h`` width (clamp-copy), per channel.
     """
     if bc.kind == "dirichlet":
         return jnp.full(face.shape, bc.value, face.dtype)
-    edge = 0 if side == "lo" else face.shape[axis] - 1
-    plane = jax.lax.slice_in_dim(face, edge, edge + 1, axis=axis)
+    ax = axis - 3  # spatial axes are the last three (leading C rides along)
+    edge = 0 if side == "lo" else face.shape[ax] - 1
+    plane = jax.lax.slice_in_dim(face, edge, edge + 1, axis=ax)
     return jnp.broadcast_to(plane, face.shape)
 
 
@@ -142,26 +160,37 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
     ``store_flat`` is the shard's ``(nb·T³,)`` ravelled curve-ordered
     block store — path-ordered state under ``store_spec(kind, T)``, so
     *all six* faces pack via the paper's precomputed index lists
-    (ops.pack_surface), none from a materialised cube. Axis-sequential
+    (ops.pack_surface), none from a materialised cube. A multi-field
+    shard passes the stacked ``(C, nb·T³)`` store: every channel packs
+    through the same index lists into the same six messages, so the
+    per-axis ICI volume simply gains the ×C factor (DESIGN.md §9) and
+    the returned slabs carry the leading channel axis. Axis-sequential
     scheme: the k faces are the bare M² surfaces; the i faces carry the
     k-received edges; the j faces carry both — after three ppermute
     rounds the six returned slabs tile the shell of the (M+2h)³ extended
     domain exactly (shapes: core/surfaces.shell_slab_shapes).
 
-    Per-axis ICI volume is 2h·M², 2h·(M+2h)·M, 2h·(M+2h)² items — the
-    ``exchange_items_per_exchange`` model in stencil/pipeline.py.
+    Per-axis ICI volume is C·2h·M², C·2h·(M+2h)·M, C·2h·(M+2h)² items —
+    the ``exchange_items_per_exchange`` model in stencil/pipeline.py.
 
-    Clamped boundaries (core.boundary, DESIGN.md §8): each axis ring is
-    *open* — ``ring_perms(n, periodic=False)`` omits the wrapping pairs,
-    so no bytes ever cross a clamped domain face — and mesh-edge shards
-    substitute boundary values into the unserved slabs (dirichlet
-    constant or neumann0 clamp-copy of their own outermost plane) before
-    the next axis forwards them, which keeps corner regions composed
-    exactly like the padded-cube oracle. Interior shards are untouched.
+    Clamped boundaries (core.boundary, DESIGN.md §8): each clamped axis
+    ring is *open* — ``ring_perms(n, periodic=False)`` omits the
+    wrapping pairs, so no bytes ever cross a clamped domain face — and
+    mesh-edge shards substitute boundary values into the unserved slabs
+    (dirichlet constant or neumann0 clamp-copy of their own outermost
+    plane) before the next axis forwards them, which keeps corner
+    regions composed exactly like the padded-cube oracle. Interior
+    shards are untouched. A per-axis ``MixedBoundary`` opens only its
+    clamped axes: the periodic axes keep full rings and wrap as on the
+    torus, so the jaxpr carries ppermute pairs for those axes alone.
     """
     bc = as_boundary(bc)
-    periodic = not bc.clamped
+    periodic = axes_periodic(bc)
+    ax_bcs = bc.axes
     hspec = store_spec(kind, T)
+    squeeze = store_flat.ndim == 1
+    if squeeze:
+        store_flat = store_flat[None]
     shp_k, _, shp_i, _, shp_j, _ = shell_slab_shapes(M, h)
 
     def _fill_edges(slab_lo, slab_hi, face_lo, face_hi, axis, ax_name):
@@ -169,20 +198,22 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
         n = jax.lax.psum(1, ax_name)
         pos = jax.lax.axis_index(ax_name)
         slab_lo = jnp.where(pos == 0,
-                            _bc_face_fill(face_lo, axis, "lo", bc), slab_lo)
+                            _bc_face_fill(face_lo, axis, "lo", ax_bcs[axis]),
+                            slab_lo)
         slab_hi = jnp.where(pos == n - 1,
-                            _bc_face_fill(face_hi, axis, "hi", bc), slab_hi)
+                            _bc_face_fill(face_hi, axis, "hi", ax_bcs[axis]),
+                            slab_hi)
         return slab_lo, slab_hi
 
     # --- k axis: pack the deep slab faces, ring-shift, unpack
     buf_k0 = ops.pack_surface(store_flat, hspec, M, h, "k0")
     buf_k1 = ops.pack_surface(store_flat, hspec, M, h, "k1")
-    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[0]), periodic=periodic)
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[0]), periodic=periodic[0])
     recv_lo = jax.lax.ppermute(buf_k1, axis_names[0], fwd)  # prev's high face
     recv_hi = jax.lax.ppermute(buf_k0, axis_names[0], bwd)  # next's low face
     slab_k_lo = _unpack_recv(recv_lo, hspec, M, h, "k1", shp_k)
     slab_k_hi = _unpack_recv(recv_hi, hspec, M, h, "k0", shp_k)
-    if not periodic:
+    if not periodic[0]:
         own_k0 = _pack_to_slab(store_flat, hspec, M, h, "k0", shp_k)
         own_k1 = _pack_to_slab(store_flat, hspec, M, h, "k1", shp_k)
         slab_k_lo, slab_k_hi = _fill_edges(slab_k_lo, slab_k_hi,
@@ -192,16 +223,16 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
     my_i0 = _pack_to_slab(store_flat, hspec, M, h, "i0", (M, h, M))
     my_i1 = _pack_to_slab(store_flat, hspec, M, h, "i1", (M, h, M))
     face_i0 = jnp.concatenate(
-        [slab_k_lo[:, :h, :], my_i0, slab_k_hi[:, :h, :]], axis=0)
+        [slab_k_lo[..., :h, :], my_i0, slab_k_hi[..., :h, :]], axis=-3)
     face_i1 = jnp.concatenate(
-        [slab_k_lo[:, M - h:, :], my_i1, slab_k_hi[:, M - h:, :]], axis=0)
-    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[1]), periodic=periodic)
+        [slab_k_lo[..., M - h:, :], my_i1, slab_k_hi[..., M - h:, :]], axis=-3)
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[1]), periodic=periodic[1])
     slab_i_lo = jax.lax.ppermute(face_i1, axis_names[1], fwd)
     slab_i_hi = jax.lax.ppermute(face_i0, axis_names[1], bwd)
-    if not periodic:
+    if not periodic[1]:
         slab_i_lo, slab_i_hi = _fill_edges(slab_i_lo, slab_i_hi,
                                            face_i0, face_i1, 1, axis_names[1])
-    assert slab_i_lo.shape == shp_i, (slab_i_lo.shape, shp_i)
+    assert slab_i_lo.shape[-3:] == shp_i, (slab_i_lo.shape, shp_i)
 
     # --- j axis: core faces + both received edge sets
     my_j0 = _pack_to_slab(store_flat, hspec, M, h, "j0", (M, M, h))
@@ -209,21 +240,22 @@ def exchange_shell(store_flat: jnp.ndarray, kind: str, M: int, T: int,
 
     def _j_face(mine, sl):
         mid = jnp.concatenate(
-            [slab_k_lo[:, :, sl], mine, slab_k_hi[:, :, sl]], axis=0)
+            [slab_k_lo[..., sl], mine, slab_k_hi[..., sl]], axis=-3)
         return jnp.concatenate(
-            [slab_i_lo[:, :, sl], mid, slab_i_hi[:, :, sl]], axis=1)
+            [slab_i_lo[..., sl], mid, slab_i_hi[..., sl]], axis=-2)
 
     face_j0 = _j_face(my_j0, slice(0, h))
     face_j1 = _j_face(my_j1, slice(M - h, M))
-    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[2]), periodic=periodic)
+    fwd, bwd = ring_perms(jax.lax.psum(1, axis_names[2]), periodic=periodic[2])
     slab_j_lo = jax.lax.ppermute(face_j1, axis_names[2], fwd)
     slab_j_hi = jax.lax.ppermute(face_j0, axis_names[2], bwd)
-    if not periodic:
+    if not periodic[2]:
         slab_j_lo, slab_j_hi = _fill_edges(slab_j_lo, slab_j_hi,
                                            face_j0, face_j1, 2, axis_names[2])
-    assert slab_j_lo.shape == shp_j, (slab_j_lo.shape, shp_j)
+    assert slab_j_lo.shape[-3:] == shp_j, (slab_j_lo.shape, shp_j)
 
-    return slab_k_lo, slab_k_hi, slab_i_lo, slab_i_hi, slab_j_lo, slab_j_hi
+    slabs = (slab_k_lo, slab_k_hi, slab_i_lo, slab_i_hi, slab_j_lo, slab_j_hi)
+    return tuple(s[0] for s in slabs) if squeeze else slabs
 
 
 def _shell_positions_device(nt: int, T: int, h: int):
@@ -239,7 +271,9 @@ def shard_boundary_flags(kind: str, nt: int,
     the *local* grid edge; a face is a physical domain face only when
     the shard also sits on the mesh edge of that axis, so each column is
     AND-masked with the shard's position read off the shard_map axes
-    (axis_names order (dx, dy, dz) ↔ face columns (k∓, i∓, j∓)).
+    (axis_names order (dx, dy, dz) ↔ face columns (k∓, i∓, j∓)). On
+    mixed contracts the refresh (rules.apply_window_bc) skips periodic
+    axes by itself, so the table needs no further bc masking.
     """
     base = jnp.asarray(boundary_face_table_device(kind, nt))
     edge = []
@@ -251,36 +285,48 @@ def shard_boundary_flags(kind: str, nt: int,
 
 
 def shard_substeps(store: jnp.ndarray, *, kind: str, M: int, g: int, S: int,
-                   rule: str = "gol", bc: BoundarySpec | str = PERIODIC,
+                   rule: str = "gol", bc: BoundarySpec | MixedBoundary | str = PERIODIC,
                    use_kernel: bool = False, interpret: bool = True,
                    axis_names=STENCIL_AXES) -> jnp.ndarray:
     """One deep exchange + S fused substeps on the resident shard store.
 
-    store: (nb, T, T, T) curve-ordered local block store (shard_map body).
-    Exchanges width S·g once, scatters the shell into shell blocks
-    appended after the core, and runs S whole timesteps through
-    ``stencil_step_fused`` (or its jnp oracle) with the extended
+    store: (nb, T, T, T) curve-ordered local block store (shard_map
+    body), or the stacked multi-field ``(C, nb, T, T, T)`` store when
+    the rule declares C > 1 (DESIGN.md §9). Exchanges width S·g once —
+    all C channels in the same six messages — scatters the shell into
+    shell blocks appended after the core, and runs S whole timesteps
+    through ``stencil_step_fused`` (or its jnp oracle) with the extended
     neighbour table — the distributed counterpart of one
     ResidentPipeline launch. S sequential S=1 calls are bit-identical
     (f32) to one S-deep call, same argument as the fused kernel.
 
-    On clamped runs (``bc``, core.boundary) the exchange fills mesh-edge
-    shell blocks with boundary values instead of ppermuted ghost data,
-    and the fused substeps refresh those ghost layers per substep via
-    the shard's mesh-masked face flags (:func:`shard_boundary_flags`) —
-    so the deep rounds stay bit-identical to S sequential clamped steps.
+    On clamped runs (``bc``, core.boundary — uniform or per-axis mixed)
+    the exchange fills mesh-edge shell blocks with boundary values
+    instead of ppermuted ghost data, and the fused substeps refresh
+    those ghost layers per substep via the shard's mesh-masked face
+    flags (:func:`shard_boundary_flags`) — so the deep rounds stay
+    bit-identical to S sequential clamped steps.
     """
-    nb, T = store.shape[0], store.shape[1]
+    multi = store.ndim == 5
+    nb, T = store.shape[-4], store.shape[-3]
     nt = M // T
     assert nb == nt ** 3, (store.shape, M)
     bc = as_boundary(bc)
     h = S * g
-    slabs = exchange_shell(store.reshape(-1), kind, M, T, h, axis_names, bc=bc)
-    vals = jnp.concatenate([s.reshape(-1) for s in slabs])
+    flat = store.reshape(store.shape[0], -1) if multi else store.reshape(-1)
+    slabs = exchange_shell(flat, kind, M, T, h, axis_names, bc=bc)
     pos = _shell_positions_device(nt, T, h)
-    shell = jnp.zeros((shell_block_count(nt) * T ** 3,), store.dtype
-                      ).at[pos].set(vals).reshape(-1, T, T, T)
-    ext = jnp.concatenate([store, shell], axis=0)
+    if multi:
+        C = store.shape[0]
+        vals = jnp.concatenate([s.reshape(C, -1) for s in slabs], axis=1)
+        shell = jnp.zeros((C, shell_block_count(nt) * T ** 3), store.dtype
+                          ).at[:, pos].set(vals).reshape(C, -1, T, T, T)
+        ext = jnp.concatenate([store, shell], axis=1)
+    else:
+        vals = jnp.concatenate([s.reshape(-1) for s in slabs])
+        shell = jnp.zeros((shell_block_count(nt) * T ** 3,), store.dtype
+                          ).at[pos].set(vals).reshape(-1, T, T, T)
+        ext = jnp.concatenate([store, shell], axis=0)
     nbr = extended_neighbor_table_device(kind, nt)
     bnd = shard_boundary_flags(kind, nt, axis_names) if bc.clamped else None
     w = uniform_weights(g)
@@ -311,17 +357,26 @@ def _store_perm_device(spec: OrderingSpec, kind: str, T: int, M: int,
                            lambda: _store_perm(spec, kind, T, M, inverse))
 
 
+def _state_pspec(channels: int) -> P:
+    """shard_map spec of the public sharded state: (px, py, pz, M³) for
+    C=1, (px, py, pz, C, M³) for a multi-field workload — the channel
+    axis is replicated across the mesh (it lives inside every shard)."""
+    return P(*STENCIL_AXES) if channels == 1 else P(*STENCIL_AXES, None)
+
+
 def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
                           local_M: int, g: int, *, T: int | None = None,
-                          rule: str = "gol", bc: BoundarySpec | str = PERIODIC,
+                          rule: str = "gol", bc: BoundarySpec | MixedBoundary | str = PERIODIC,
                           use_kernel: bool = False, interpret: bool = True):
     """jit'd distributed stencil step on a sharded (P·M)³ global state.
 
     Global state layout: (px, py, pz, M³) — device (a,b,c) owns row
     [a,b,c] holding its local path-ordered state under ``spec``
-    (see :func:`shard_state`). ``bc`` selects the boundary contract
-    (core.boundary: periodic | dirichlet | neumann0). Returns
-    step(global_state) -> global_state.
+    (see :func:`shard_state`). A multi-field rule (C > 1) uses
+    (px, py, pz, C, M³): the C channels ride inside every shard, each
+    path-ordered under the same ``spec``. ``bc`` selects the boundary
+    contract (core.boundary: periodic | dirichlet | neumann0 | mixed).
+    Returns step(global_state) -> global_state.
 
     The legacy per-step reference for DistributedPipeline (which runs the
     same :func:`shard_substeps` round at depth S): no per-step full-cube
@@ -333,18 +388,32 @@ def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
     """
     if T is None:
         T = min(8, local_M)
-    pspec = P(*STENCIL_AXES)
+    C = get_rule(rule).channels
+    pspec = _state_pspec(C)
     kind = stencil_block_kind(spec)
     nt = local_M // T
 
-    def local_step(state_path):  # (1,1,1,M³) per device
-        s = state_path.reshape(-1)
-        store = s[_store_perm_device(spec, kind, T, local_M, False)]
-        store = shard_substeps(store.reshape(nt ** 3, T, T, T), kind=kind,
+    def local_step(state_path):  # (1,1,1,[C,]M³) per device
+        if C == 1:
+            s = state_path.reshape(-1)
+            store = s[_store_perm_device(spec, kind, T, local_M, False)]
+            store = store.reshape(nt ** 3, T, T, T)
+        else:
+            s = state_path.reshape(C, -1)
+            store = jnp.take(s, _store_perm_device(spec, kind, T, local_M,
+                                                   False), axis=-1)
+            store = store.reshape(C, nt ** 3, T, T, T)
+        store = shard_substeps(store, kind=kind,
                                M=local_M, g=g, S=1, rule=rule, bc=bc,
                                use_kernel=use_kernel, interpret=interpret)
-        out = store.reshape(-1)[_store_perm_device(spec, kind, T, local_M, True)]
-        return out.reshape(1, 1, 1, -1)
+        if C == 1:
+            out = store.reshape(-1)[_store_perm_device(spec, kind, T,
+                                                       local_M, True)]
+            return out.reshape(1, 1, 1, -1)
+        out = jnp.take(store.reshape(C, -1),
+                       _store_perm_device(spec, kind, T, local_M, True),
+                       axis=-1)
+        return out.reshape(1, 1, 1, C, -1)
 
     # check_rep=False: pallas_call has no shard_map replication rule yet
     step = shard_map(local_step, mesh=mesh, in_specs=pspec, out_specs=pspec,
@@ -358,28 +427,42 @@ def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
 
 def shard_state(cube: jnp.ndarray, spec: OrderingSpec,
                 procs: tuple[int, int, int]) -> jnp.ndarray:
-    """(GM,GM,GM) canonical cube -> (px,py,pz,M³) per-shard path state."""
+    """(GM,GM,GM) canonical cube -> (px,py,pz,M³) per-shard path state.
+
+    Stacked multi-field input (C,GM,GM,GM) -> (px,py,pz,C,M³): every
+    channel shards identically and is path-ordered under ``spec``.
+    """
     from repro.core.layout import _perm_device
 
+    squeeze = cube.ndim == 3
+    if squeeze:
+        cube = cube[None]
+    C, GM = cube.shape[0], cube.shape[1]
     px, py, pz = procs
-    GM = cube.shape[0]
     assert GM % px == 0 and GM % py == 0 and GM % pz == 0, (GM, procs)
     lk, li, lj = GM // px, GM // py, GM // pz
     assert lk == li == lj, "local block must be cubic"
-    parts = cube.reshape(px, lk, py, li, pz, lj).transpose(0, 2, 4, 1, 3, 5)
+    parts = cube.reshape(C, px, lk, py, li, pz, lj) \
+        .transpose(1, 3, 5, 0, 2, 4, 6)  # (px,py,pz,C,lk,li,lj)
     q = _perm_device(spec, lk, False)  # path pos -> rmo (apply_ordering)
-    return jnp.take(parts.reshape(px, py, pz, -1), q, axis=-1)
+    out = jnp.take(parts.reshape(px, py, pz, C, -1), q, axis=-1)
+    return out[:, :, :, 0] if squeeze else out
 
 
 def unshard_state(state: jnp.ndarray, spec: OrderingSpec,
                   global_M: int) -> jnp.ndarray:
-    """Inverse of :func:`shard_state`."""
+    """Inverse of :func:`shard_state` (C-stacked state comes back as
+    (C, GM, GM, GM))."""
     from repro.core.layout import _perm_device
 
-    px, py, pz = state.shape[:3]
-    lk = round(state.shape[3] ** (1 / 3))
-    lk = next(m for m in (lk - 1, lk, lk + 1) if m ** 3 == state.shape[3])
+    squeeze = state.ndim == 4
+    if squeeze:
+        state = state[:, :, :, None]
+    px, py, pz, C = state.shape[:4]
+    lk = round(state.shape[4] ** (1 / 3))
+    lk = next(m for m in (lk - 1, lk, lk + 1) if m ** 3 == state.shape[4])
     p = _perm_device(spec, lk, True)  # rmo -> path pos (undo_ordering)
-    parts = jnp.take(state, p, axis=-1).reshape(px, py, pz, lk, lk, lk)
-    return parts.transpose(0, 3, 1, 4, 2, 5).reshape(global_M, global_M,
-                                                     global_M)
+    parts = jnp.take(state, p, axis=-1).reshape(px, py, pz, C, lk, lk, lk)
+    out = parts.transpose(3, 0, 4, 1, 5, 2, 6).reshape(C, global_M, global_M,
+                                                       global_M)
+    return out[0] if squeeze else out

@@ -1,4 +1,4 @@
-"""Fused resident-block-store stencil driver (DESIGN.md §3–§4).
+"""Fused resident-block-store stencil driver (DESIGN.md §3–§4, §9).
 
 The paper's central claim is that SFC orderings pay off only when the
 curve order *is* the storage order — reorder once, iterate many times
@@ -10,28 +10,35 @@ stencil workloads:
                       tables, never materialised in HBM)
                    →  unblockize once.
 
-The per-step state is exactly one ``(nb, T, T, T)`` block store — M³
-elements, no ``((T+2g)/T)³`` halo duplication — and consecutive launches
-ping-pong between two such stores: the K-step runner is jit'd with the
-input store donated, so XLA aliases the output of launch k as the input
-of launch k+1 (classic double buffering) instead of allocating per step.
+The per-step state is exactly one ``(C, nb, T, T, T)`` block store — C
+channels of M³ elements, one shared block permutation, no
+``((T+2g)/T)³`` halo duplication (C=1 workloads keep the plain
+``(nb, T, T, T)`` form) — and consecutive launches ping-pong between
+two such stores: the K-step runner is jit'd with the input store
+donated, so XLA aliases the output of launch k as the input of launch
+k+1 (classic double buffering) instead of allocating per step.
 
 Temporal blocking (DESIGN.md §4): with ``S`` substeps per launch the
-kernel assembles a ``(T+2·S·g)³`` window and runs S whole tap-sum +
-update-rule substeps in VMEM before writing the T³ tile once — K
-timesteps become ``ceil(K/S)`` HBM round-trips. ``plan()`` autotunes
-(T, S) by minimising the modelled bytes/substep under the VMEM budget.
+kernel assembles a ``(T+2·S·g)³`` window per channel and runs S whole
+tap-sum + update-rule substeps in VMEM before writing the C·T³ tiles
+once — K timesteps become ``ceil(K/S)`` HBM round-trips. ``plan()``
+autotunes (T, S) by minimising the modelled bytes/substep under the
+VMEM budget, with every term carrying the rule's channel count.
 
 The ``*_items_per_*`` helpers are the single source of HBM-traffic
 accounting shared by benchmarks/stencil_update.py and
-benchmarks/kernel_bench.py (asserted consistent in tests).
+benchmarks/kernel_bench.py (asserted consistent in tests); their
+``fields`` keyword is the ×C factor of the multi-field store
+(DESIGN.md §9).
 
-Both pipelines carry a boundary contract (``bc``,
-core.boundary.BoundarySpec — DESIGN.md §8): clamped runs swap in the
-non-wrapping neighbour tables, refresh ghost layers per substep, open
-the exchange rings (the clamped keywords of the exchange-bytes helpers
-model the smaller surface), and stay bit-identical (f32) between the
-S-deep and sequential forms exactly like the periodic case.
+Both pipelines carry a boundary contract (``bc``, core.boundary —
+DESIGN.md §8): clamped runs swap in the non-wrapping neighbour tables,
+refresh ghost layers per substep, open the exchange rings (the clamped
+keywords of the exchange-bytes helpers model the smaller surface), and
+stay bit-identical (f32) between the S-deep and sequential forms
+exactly like the periodic case. A per-axis ``MixedBoundary`` (clamped k,
+periodic i/j, …) threads through identically: only its clamped axes
+open.
 """
 
 from __future__ import annotations
@@ -41,11 +48,12 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.boundary import PERIODIC, BoundarySpec, as_boundary
-from repro.core.layout import blockize, unblockize
+from repro.core.boundary import (PERIODIC, BoundarySpec, MixedBoundary,
+                                 as_boundary, axes_periodic)
+from repro.core.layout import (blockize, blockize_fields, unblockize,
+                               unblockize_fields)
 from repro.core.neighbors import (boundary_face_table_device,
                                   neighbor_table_device)
 from repro.core.orderings import OrderingSpec
@@ -56,7 +64,7 @@ from repro.kernels.stencil3d import stencil_step_fused
 
 from .domain import STENCIL_AXES
 from .halo import (shard_substeps, shard_state, stencil_block_kind,
-                   unshard_state, _store_perm_device)
+                   unshard_state, _state_pspec, _store_perm_device)
 
 __all__ = [
     "ResidentPipeline", "DistributedPipeline", "VMEM_BUDGET_BYTES",
@@ -85,12 +93,17 @@ class ResidentPipeline:
                 "column_major" (core.neighbors.block_kind_of maps an
                 OrderingSpec here)
     S:          substeps fused into one kernel launch (temporal blocking)
-    rule:       update rule registry key (kernels/rules.py)
-    bc:         boundary contract (core.boundary.BoundarySpec or kind
-                string): "periodic" (default, torus) | "dirichlet" |
-                "neumann0". Clamped runs use the non-wrapping neighbour
-                table and refresh ghost layers per substep — temporal
-                blocking stays exactly as deep at domain edges
+    rule:       update rule registry key (kernels/rules.py). The rule's
+                declared ``channels`` (C) selects the store form: C=1
+                rules run the plain ``(nb, T³)`` store, multi-field
+                rules (``wave``) the stacked ``(C, nb, T³)`` store
+                (DESIGN.md §9) — same curve, same neighbour tables.
+    bc:         boundary contract (core.boundary.BoundarySpec, a kind
+                string, or a per-axis MixedBoundary): "periodic"
+                (default, torus) | "dirichlet" | "neumann0". Clamped
+                runs use the non-wrapping neighbour table (per axis for
+                mixed contracts) and refresh ghost layers per substep —
+                temporal blocking stays exactly as deep at domain edges
                 (DESIGN.md §8).
     use_kernel: Pallas fused kernel (interpret on CPU) vs jnp oracle
 
@@ -105,7 +118,7 @@ class ResidentPipeline:
     interpret: bool = True
     S: int = 1
     rule: str = "gol"
-    bc: BoundarySpec = PERIODIC
+    bc: BoundarySpec | MixedBoundary = PERIODIC
 
     def __post_init__(self):
         object.__setattr__(self, "bc", as_boundary(self.bc))
@@ -127,11 +140,16 @@ class ResidentPipeline:
     def nb(self) -> int:
         return self.nt ** 3
 
+    @property
+    def channels(self) -> int:
+        """C of the rule's store — the ×C factor of every byte model."""
+        return get_rule(self.rule).channels
+
     # -- autotuner ---------------------------------------------------------
     @classmethod
     def plan(cls, M: int, g: int = 1, kind: str = "morton",
              rule: str = "gol", n_steps: int = 10, *,
-             bc: BoundarySpec | str = PERIODIC,
+             bc: BoundarySpec | MixedBoundary | str = PERIODIC,
              vmem_limit: int = VMEM_BUDGET_BYTES, max_S: int = 8,
              use_kernel: bool = False, interpret: bool = True,
              itemsize: int = 4) -> "ResidentPipeline":
@@ -140,28 +158,40 @@ class ResidentPipeline:
         Searches power-of-two block edges T | M (with g | T) and substep
         counts S ≤ max_S (with S·g | T), keeps candidates whose fused
         working set fits ``vmem_limit``, and minimises
-        ``resident_bytes_per_step(M, T, g, n_steps, S=S)``. The cost is
-        non-monotone in S at fixed T — window inflation (T+2·S·g)³/S
-        eventually out-grows the S× amortisation — so this is a real
-        search, not "largest S that fits". Ties break toward smaller
-        windows. ``bc`` threads through to the pipeline unchanged: the
-        single-device HBM stream is boundary-independent (clamped runs
-        trade wrapped halo reads for in-window substitution, same
-        window), so the plan itself does not shift.
+        ``resident_bytes_per_step(M, T, g, n_steps, S=S, fields=C)``.
+        The cost is non-monotone in S at fixed T — window inflation
+        (T+2·S·g)³/S eventually out-grows the S× amortisation — so this
+        is a real search, not "largest S that fits". Ties break toward
+        smaller windows. A multi-field rule scales both the stream and
+        the VMEM working set by its C, so the same budget admits
+        shallower windows (DESIGN.md §9). ``bc`` threads through to the
+        pipeline unchanged: the single-device HBM stream is
+        boundary-independent (clamped runs trade wrapped halo reads for
+        in-window substitution, same window), so the plan itself does
+        not shift.
         """
+        C = get_rule(rule).channels
         T, S = _plan_search(
             M, g, max_S, vmem_limit, itemsize,
             lambda T, S: resident_bytes_per_step(M, T, g, n_steps,
-                                                 itemsize, S=S))
+                                                 itemsize, S=S, fields=C),
+            fields=C)
         return cls(M=M, T=T, g=g, kind=kind, S=S, rule=rule, bc=bc,
                    use_kernel=use_kernel, interpret=interpret)
 
     # -- layout boundary (paid once per K-step run, not per step) ---------
     def to_blocks(self, cube: jnp.ndarray) -> jnp.ndarray:
-        return blockize(cube, self.T, kind=self.kind)
+        """Blockize the canonical state: an (M,M,M) cube for C=1 rules,
+        stacked (C,M,M,M) fields for multi-field rules — one shared
+        block permutation either way."""
+        if cube.ndim == 3:
+            return blockize(cube, self.T, kind=self.kind)
+        return blockize_fields(cube, self.T, kind=self.kind)
 
     def to_cube(self, store: jnp.ndarray) -> jnp.ndarray:
-        return unblockize(store, self.M, kind=self.kind)
+        if store.ndim == 4:
+            return unblockize(store, self.M, kind=self.kind)
+        return unblockize_fields(store, self.M, kind=self.kind)
 
     # -- the resident step -------------------------------------------------
     def step_fn(self, substeps: int | None = None):
@@ -170,15 +200,16 @@ class ResidentPipeline:
         Kernel mode is one ``stencil_step_fused`` launch; oracle mode is
         the same math as sequential jnp substeps — bit-identical for f32
         stores (substeps accumulate in f32 on both paths). Clamped runs
-        feed the non-wrapping neighbour table plus the block boundary
-        flags; the per-substep ghost refresh lives in the shared
-        kernels/rules.apply_window_bc helper on both paths.
+        feed the non-wrapping neighbour table (per-axis for mixed
+        contracts) plus the block boundary flags; the per-substep ghost
+        refresh lives in the shared kernels/rules.apply_window_bc helper
+        on both paths.
         """
         S = self.S if substeps is None else substeps
         assert self._valid_S(S), (self.T, self.g, S)
         g, bc, w = self.g, self.bc, uniform_weights(self.g)
         nbr = neighbor_table_device(self.kind, self.nt,
-                                    periodic=not bc.clamped)
+                                    periodic=axes_periodic(bc))
         bnd = boundary_face_table_device(self.kind, self.nt) \
             if bc.clamped else None
         rule = get_rule(self.rule)
@@ -221,7 +252,11 @@ class ResidentPipeline:
         return run
 
     def run(self, cube: jnp.ndarray, n_steps: int) -> jnp.ndarray:
-        """blockize once → n_steps fused curve-ordered updates → unblockize."""
+        """blockize once → n_steps fused curve-ordered updates → unblockize.
+
+        ``cube`` is (M,M,M) for C=1 rules, stacked (C,M,M,M) for
+        multi-field rules; the return matches.
+        """
         store = self.to_blocks(cube)
         store = self.run_fn(n_steps)(store)
         return self.to_cube(store)
@@ -229,17 +264,21 @@ class ResidentPipeline:
     # -- modelled HBM traffic (benchmarks/stencil_update.py) ---------------
     def bytes_per_step(self, n_steps: int, itemsize: int = 4) -> float:
         return resident_bytes_per_step(self.M, self.T, self.g, n_steps,
-                                       itemsize, S=self.S)
+                                       itemsize, S=self.S,
+                                       fields=self.channels)
 
     def vmem_bytes(self, itemsize: int = 4) -> int:
-        return fused_vmem_bytes(self.T, self.g, self.S, itemsize)
+        return fused_vmem_bytes(self.T, self.g, self.S, itemsize,
+                                fields=self.channels)
 
 
 def _plan_search(M: int, g: int, max_S: int, vmem_limit: int, itemsize: int,
-                 cost_fn) -> tuple[int, int]:
+                 cost_fn, fields: int = 1) -> tuple[int, int]:
     """Enumerate valid power-of-two (T, S) under the VMEM budget and pick
     the ``cost_fn(T, S)``-cheapest pair (ties toward smaller windows) —
-    the one search behind both the resident and the distributed plan."""
+    the one search behind both the resident and the distributed plan.
+    ``fields`` scales the modelled working set (multi-field stores keep
+    C windows live)."""
     best = None
     T = 1
     while T <= M:
@@ -248,7 +287,7 @@ def _plan_search(M: int, g: int, max_S: int, vmem_limit: int, itemsize: int,
             while S <= max_S:
                 h = S * g
                 if h <= T and T % h == 0:
-                    vm = fused_vmem_bytes(T, g, S, itemsize)
+                    vm = fused_vmem_bytes(T, g, S, itemsize, fields=fields)
                     if vm <= vmem_limit:
                         cost = cost_fn(T, S)
                         if best is None or (cost, vm) < best[0]:
@@ -257,24 +296,30 @@ def _plan_search(M: int, g: int, max_S: int, vmem_limit: int, itemsize: int,
         T *= 2
     if best is None:
         raise ValueError(
-            f"no (T, S) fits vmem_limit={vmem_limit} for M={M}, g={g}")
+            f"no (T, S) fits vmem_limit={vmem_limit} for M={M}, g={g}, "
+            f"fields={fields}")
     return best[1], best[2]
 
 
-def fused_vmem_bytes(T: int, g: int, S: int, itemsize: int = 4) -> int:
+def fused_vmem_bytes(T: int, g: int, S: int, itemsize: int = 4, *,
+                     fields: int = 1) -> int:
     """Modelled VMEM working set of one fused-kernel grid step.
 
-    Two window-sized live arrays (the assembled window plus the tap/rule
-    temporary), the T³ output tile double-buffered, and the tap weights.
+    Two window-sized live arrays per channel (the assembled window plus
+    the tap/rule temporary), the C·T³ output tile double-buffered, and
+    the tap weights (shared across channels).
     """
     W3 = (T + 2 * S * g) ** 3
-    return itemsize * (2 * W3 + 2 * T ** 3 + (2 * g + 1) ** 3)
+    return itemsize * (fields * (2 * W3 + 2 * T ** 3) + (2 * g + 1) ** 3)
 
 
 # ---------------------------------------------------------------------------
 # HBM-traffic accounting — the one source of truth for every benchmark row.
 # ``*_items_per_*`` count array elements; ``*_bytes_per_step`` scale by
-# itemsize and amortise the one-off layout boundary over the run.
+# itemsize and amortise the one-off layout boundary over the run. The
+# ``fields`` keyword is the multi-field ×C factor (DESIGN.md §9): a
+# C-channel store streams C windows in and C tiles out per block, packs C
+# channels per exchanged face, and blockizes C cubes at the run boundary.
 # ---------------------------------------------------------------------------
 
 def repack_items_per_step(M: int, T: int, g: int) -> int:
@@ -315,27 +360,32 @@ def resident_unfused_bytes_per_step(M: int, T: int, g: int, n_steps: int,
     return itemsize * (per_step + _boundary_items(M) / max(n_steps, 1))
 
 
-def fused_items_per_launch(M: int, T: int, g: int, S: int) -> int:
-    """HBM items of one fused launch: read (T+2·S·g)³ + write T³ per block.
+def fused_items_per_launch(M: int, T: int, g: int, S: int, *,
+                           fields: int = 1) -> int:
+    """HBM items of one fused launch: read C·(T+2·S·g)³ + write C·T³ per
+    block — every channel streams its window and tile (DESIGN.md §9).
 
     No tap-sum array, no rule pass — S substeps ride one round-trip.
     """
     nb = (M // T) ** 3
-    return nb * (T + 2 * S * g) ** 3 + nb * T ** 3
+    return fields * (nb * (T + 2 * S * g) ** 3 + nb * T ** 3)
 
 
 def resident_bytes_per_step(M: int, T: int, g: int, n_steps: int,
-                            itemsize: int = 4, *, S: int = 1) -> float:
+                            itemsize: int = 4, *, S: int = 1,
+                            fields: int = 1) -> float:
     """Modelled HBM bytes per timestep of the fused resident pipeline.
 
-    The unit is unchanged from PR-1: one whole gol3d/jacobi timestep (a
-    "substep" of a fused launch is a full timestep). One launch advances
-    S of them, so the per-launch stream amortises by S; the one-off
-    blockize/unblockize (read M³ + write M³ each) amortises over the
-    whole K-step run.
+    The unit is unchanged from PR-1: one whole timestep of the workload
+    (a "substep" of a fused launch is a full timestep; a multi-field
+    timestep advances all C channels, hence the ×C stream). One launch
+    advances S of them, so the per-launch stream amortises by S; the
+    one-off blockize/unblockize (read C·M³ + write C·M³ each) amortises
+    over the whole K-step run.
     """
-    per_substep = fused_items_per_launch(M, T, g, S) / S
-    return itemsize * (per_substep + _boundary_items(M) / max(n_steps, 1))
+    per_substep = fused_items_per_launch(M, T, g, S, fields=fields) / S
+    return itemsize * (per_substep
+                       + fields * _boundary_items(M) / max(n_steps, 1))
 
 
 def _boundary_items(M: int) -> int:
@@ -344,7 +394,8 @@ def _boundary_items(M: int) -> int:
 
 
 def exchange_face_items(M: int, g: int, S: int = 1) -> tuple[int, int, int]:
-    """Per-axis items of ONE sent face at exchange depth h = S·g.
+    """Per-axis items of ONE sent face at exchange depth h = S·g (single
+    channel — the exchange helpers apply the ×C ``fields`` factor).
 
     Axis-sequential corner-correct extents (stencil/halo.exchange_shell):
     the k faces are bare h·M² slabs, the i faces carry the k-received
@@ -358,69 +409,78 @@ def exchange_face_items(M: int, g: int, S: int = 1) -> tuple[int, int, int]:
 
 
 def exchange_items_per_exchange(M: int, g: int, S: int = 1, *,
-                                bc: BoundarySpec | str = PERIODIC,
+                                bc: BoundarySpec | MixedBoundary | str = PERIODIC,
                                 procs: tuple[int, int, int] | None = None,
-                                coords: tuple[int, int, int] | None = None
-                                ) -> float:
+                                coords: tuple[int, int, int] | None = None,
+                                fields: int = 1) -> float:
     """ICI items one shard moves per deep halo exchange (h = S·g).
 
     Periodic (default): every shard sends both faces on all three axes —
-    ``2h·[M² + (M+2h)·M + (M+2h)²]`` items. Deep halos therefore move
-    *slightly more* bytes in total (the corner terms grow with h) — what
-    S buys is S× fewer exchanges (latency/launch amortisation) and the
-    fused kernel's HBM amortisation, the communication-avoiding trade.
+    ``C·2h·[M² + (M+2h)·M + (M+2h)²]`` items (C = ``fields``: every
+    channel packs into the same messages, DESIGN.md §9). Deep halos
+    therefore move *slightly more* bytes in total (the corner terms grow
+    with h) — what S buys is S× fewer exchanges (latency/launch
+    amortisation) and the fused kernel's HBM amortisation, the
+    communication-avoiding trade.
 
-    Clamped (``bc`` dirichlet/neumann0): the rings are open, so a send
-    happens only where a neighbour exists — pass the mesh shape
-    ``procs`` and either a shard's mesh ``coords`` (that shard's exact
-    items: each axis contributes its face size once per existing
-    neighbour, so mesh-edge shards move strictly fewer bytes than the
-    periodic torus) or ``coords=None`` for the mesh-wide mean
-    (``2(p-1)/p`` faces per axis — the smaller exchange surface
-    DistributedPipeline.plan() minimises).
+    Clamped (``bc`` dirichlet/neumann0, or a per-axis mixed contract):
+    clamped-axis rings are open, so a send happens only where a
+    neighbour exists — pass the mesh shape ``procs`` and either a
+    shard's mesh ``coords`` (that shard's exact items: each clamped axis
+    contributes its face size once per existing neighbour, so mesh-edge
+    shards move strictly fewer bytes than the periodic torus) or
+    ``coords=None`` for the mesh-wide mean (``2(p-1)/p`` faces per
+    clamped axis — the smaller exchange surface
+    DistributedPipeline.plan() minimises). Periodic axes of a mixed
+    contract keep the full 2-face volume.
     """
     sizes = exchange_face_items(M, g, S)
-    if not as_boundary(bc).clamped:
-        return float(2 * sum(sizes))
-    if procs is None:
-        raise ValueError("clamped exchange accounting needs the mesh "
-                         "shape (procs=(px, py, pz))")
+    periodic = axes_periodic(bc)
     total = 0.0
     for ax, sz in enumerate(sizes):
+        if periodic[ax]:
+            total += 2 * sz
+            continue
+        if procs is None:
+            raise ValueError("clamped exchange accounting needs the mesh "
+                             "shape (procs=(px, py, pz))")
         p = procs[ax]
         if coords is None:
             total += sz * 2 * (p - 1) / p
         else:
             total += sz * ((coords[ax] > 0) + (coords[ax] < p - 1))
-    return total
+    return fields * total
 
 
 def exchange_bytes_per_step(M: int, g: int, S: int = 1, itemsize: int = 4, *,
-                            bc: BoundarySpec | str = PERIODIC,
+                            bc: BoundarySpec | MixedBoundary | str = PERIODIC,
                             procs: tuple[int, int, int] | None = None,
-                            coords: tuple[int, int, int] | None = None
-                            ) -> float:
+                            coords: tuple[int, int, int] | None = None,
+                            fields: int = 1) -> float:
     """Modelled ICI bytes per *timestep*: one width-S·g exchange funds S
-    (clamped keyword accounting as in exchange_items_per_exchange)."""
+    (clamped/mixed keyword accounting as in exchange_items_per_exchange;
+    ``fields`` is the multi-field ×C factor)."""
     items = exchange_items_per_exchange(M, g, S, bc=bc, procs=procs,
-                                        coords=coords)
+                                        coords=coords, fields=fields)
     return itemsize * items / S
 
 
 def distributed_bytes_per_step(M: int, T: int, g: int, n_steps: int,
                                itemsize: int = 4, *, S: int = 1,
-                               bc: BoundarySpec | str = PERIODIC,
+                               bc: BoundarySpec | MixedBoundary | str = PERIODIC,
                                procs: tuple[int, int, int] | None = None,
-                               coords: tuple[int, int, int] | None = None
-                               ) -> float:
+                               coords: tuple[int, int, int] | None = None,
+                               fields: int = 1) -> float:
     """Total modelled data movement per timestep of one mesh shard:
     HBM (fused resident model) + ICI (deep-exchange model) — the
     single-accounting number behind the distributed benchmark rows and
-    DistributedPipeline.plan(). The HBM term is boundary-independent;
-    the ICI term shrinks on clamped meshes (edge shards skip faces)."""
-    return (resident_bytes_per_step(M, T, g, n_steps, itemsize, S=S)
+    DistributedPipeline.plan(), with both terms carrying the multi-field
+    ×C ``fields`` factor. The HBM term is boundary-independent; the ICI
+    term shrinks on clamped meshes (edge shards skip faces)."""
+    return (resident_bytes_per_step(M, T, g, n_steps, itemsize, S=S,
+                                    fields=fields)
             + exchange_bytes_per_step(M, g, S, itemsize, bc=bc, procs=procs,
-                                      coords=coords))
+                                      coords=coords, fields=fields))
 
 
 # ---------------------------------------------------------------------------
@@ -433,23 +493,27 @@ class DistributedPipeline:
 
     The communication-avoiding composition of the PR-1/PR-2 machinery
     with the halo exchange: every shard keeps its local state as the
-    curve-ordered ``(nb, T, T, T)`` block store for the whole K-step
-    loop (one permutation gather in, one out — never per step), packs
-    *deep* width-S·g faces straight from that store via the precomputed
-    index lists, and advances S whole timesteps per exchange through the
-    fused kernel path (halo.shard_substeps). Bit-identical (f32) to S
-    sequential :func:`repro.stencil.halo.make_distributed_step` steps.
+    curve-ordered ``(nb, T, T, T)`` block store — stacked
+    ``(C, nb, T, T, T)`` for a multi-field rule (DESIGN.md §9) — for the
+    whole K-step loop (one permutation gather in, one out — never per
+    step), packs *deep* width-S·g faces of every channel straight from
+    that store via the precomputed index lists, and advances S whole
+    timesteps per exchange through the fused kernel path
+    (halo.shard_substeps). Bit-identical (f32) to S sequential
+    :func:`repro.stencil.halo.make_distributed_step` steps.
 
     mesh:  3D device mesh over STENCIL_AXES (domain.make_stencil_mesh)
     spec:  element ordering of the public sharded state (shard_state)
     M:     local shard edge (power of 2); T: block edge (T | M, S·g | T)
     g:     stencil radius; S: substeps per exchange; rule: rules.py key
+           (its ``channels`` selects the C of the store and state layout)
     bc:    boundary contract (core.boundary): "periodic" (torus wrap,
-           default) | "dirichlet" | "neumann0". Clamped runs open the
-           exchange rings (mesh-edge shards move no bytes across domain
-           faces; their shell blocks carry boundary values instead) and
-           refresh ghost layers per substep — S-deep rounds stay
-           bit-identical (f32) to S sequential clamped steps
+           default) | "dirichlet" | "neumann0" | a per-axis
+           ``MixedBoundary``. Clamped runs open the exchange rings on
+           their clamped axes (mesh-edge shards move no bytes across
+           domain faces; their shell blocks carry boundary values
+           instead) and refresh ghost layers per substep — S-deep rounds
+           stay bit-identical (f32) to S sequential clamped steps
            (DESIGN.md §8).
     """
     mesh: jax.sharding.Mesh = field(compare=False)
@@ -461,7 +525,7 @@ class DistributedPipeline:
     rule: str = "gol"
     use_kernel: bool = False
     interpret: bool = True
-    bc: BoundarySpec = PERIODIC
+    bc: BoundarySpec | MixedBoundary = PERIODIC
 
     def __post_init__(self):
         object.__setattr__(self, "bc", as_boundary(self.bc))
@@ -479,6 +543,10 @@ class DistributedPipeline:
         return stencil_block_kind(self.spec)
 
     @property
+    def channels(self) -> int:
+        return get_rule(self.rule).channels
+
+    @property
     def procs(self) -> tuple[int, int, int]:
         return tuple(self.mesh.shape[a] for a in STENCIL_AXES)
 
@@ -492,7 +560,7 @@ class DistributedPipeline:
     @classmethod
     def plan(cls, mesh, spec: OrderingSpec, M: int, g: int = 1,
              rule: str = "gol", n_steps: int = 10, *,
-             bc: BoundarySpec | str = PERIODIC,
+             bc: BoundarySpec | MixedBoundary | str = PERIODIC,
              vmem_limit: int = VMEM_BUDGET_BYTES, max_S: int = 8,
              use_kernel: bool = False, interpret: bool = True,
              itemsize: int = 4) -> "DistributedPipeline":
@@ -502,22 +570,27 @@ class DistributedPipeline:
         carries the exchange term: S trades window inflation against
         both HBM amortisation and exchange frequency (the corner terms
         of a deep exchange grow with S·g), so the optimum can shift
-        versus the single-device plan. Clamped ``bc`` shrinks the
-        exchange term to the mesh-wide mean surface (edge shards skip
-        faces on open rings), computed for this mesh's shape.
+        versus the single-device plan. Both terms carry the rule's ×C
+        channel factor. Clamped ``bc`` shrinks the exchange term to the
+        mesh-wide mean surface (edge shards skip faces on open rings),
+        computed for this mesh's shape; a mixed contract shrinks only
+        its clamped axes.
         """
         procs = tuple(mesh.shape[a] for a in STENCIL_AXES)
+        C = get_rule(rule).channels
         T, S = _plan_search(
             M, g, max_S, vmem_limit, itemsize,
             lambda T, S: distributed_bytes_per_step(M, T, g, n_steps,
                                                     itemsize, S=S, bc=bc,
-                                                    procs=procs))
+                                                    procs=procs, fields=C),
+            fields=C)
         return cls(mesh=mesh, spec=spec, M=M, T=T, g=g, S=S, rule=rule,
                    bc=bc, use_kernel=use_kernel, interpret=interpret)
 
     # -- the K-step runner -------------------------------------------------
     def run_fn(self, n_steps: int):
-        """jit'd (px,py,pz,M³) -> same: ceil(K/S) exchange+compute rounds.
+        """jit'd (px,py,pz,[C,]M³) -> same: ceil(K/S) exchange+compute
+        rounds.
 
         A K % S remainder runs as one shallower round when S·g-divisibility
         allows, else step by step — mirroring ResidentPipeline.run_fn.
@@ -527,16 +600,20 @@ class DistributedPipeline:
             tail_rounds, tail_S = rem, 1
         else:
             tail_rounds, tail_S = (1, rem) if rem else (0, 0)
-        pspec = P(*STENCIL_AXES)
+        C = self.channels
+        pspec = _state_pspec(C)
         spec, kind, M, T = self.spec, self.kind, self.M, self.T
         nt = M // T
         round_kw = dict(kind=kind, M=M, g=self.g, rule=self.rule, bc=self.bc,
                         use_kernel=self.use_kernel, interpret=self.interpret)
 
-        def local_run(state_path):  # (1,1,1,M³) per device
-            s = state_path.reshape(-1)
-            store = s[_store_perm_device(spec, kind, T, M, False)]
-            store = store.reshape(nt ** 3, T, T, T)
+        def local_run(state_path):  # (1,1,1,[C,]M³) per device
+            perm = _store_perm_device(spec, kind, T, M, False)
+            if C == 1:
+                store = state_path.reshape(-1)[perm].reshape(nt ** 3, T, T, T)
+            else:
+                store = jnp.take(state_path.reshape(C, -1), perm, axis=-1)
+                store = store.reshape(C, nt ** 3, T, T, T)
             if full:
                 store = jax.lax.fori_loop(
                     0, full,
@@ -547,19 +624,23 @@ class DistributedPipeline:
                     0, tail_rounds,
                     lambda _, st: shard_substeps(st, S=tail_S, **round_kw),
                     store)
-            out = store.reshape(-1)[_store_perm_device(spec, kind, T, M, True)]
-            return out.reshape(1, 1, 1, -1)
+            iperm = _store_perm_device(spec, kind, T, M, True)
+            if C == 1:
+                return store.reshape(-1)[iperm].reshape(1, 1, 1, -1)
+            out = jnp.take(store.reshape(C, -1), iperm, axis=-1)
+            return out.reshape(1, 1, 1, C, -1)
 
         # check_rep=False: pallas_call has no shard_map replication rule yet
         return jax.jit(shard_map(local_run, mesh=self.mesh, in_specs=pspec,
                                  out_specs=pspec, check_rep=False))
 
     def run(self, state: jnp.ndarray, n_steps: int) -> jnp.ndarray:
-        """Advance a (px,py,pz,M³) sharded path-ordered state K steps."""
+        """Advance a (px,py,pz,[C,]M³) sharded path-ordered state K steps."""
         return self.run_fn(n_steps)(state)
 
     def run_cube(self, cube: jnp.ndarray, n_steps: int) -> jnp.ndarray:
-        """Convenience: shard a canonical global cube, run, gather back."""
+        """Convenience: shard a canonical global cube — stacked
+        (C,GM,GM,GM) fields for a multi-field rule — run, gather back."""
         st = shard_state(cube, self.spec, self.procs)
         st = self.run(st, n_steps)
         return unshard_state(st, self.spec, self.global_M)
@@ -572,14 +653,16 @@ class DistributedPipeline:
         differ per shard — edge shards skip faces)."""
         return distributed_bytes_per_step(self.M, self.T, self.g, n_steps,
                                           itemsize, S=self.S, bc=self.bc,
-                                          procs=self.procs, coords=coords)
+                                          procs=self.procs, coords=coords,
+                                          fields=self.channels)
 
     def exchange_bytes_per_step(self, itemsize: int = 4,
                                 coords: tuple[int, int, int] | None = None
                                 ) -> float:
         return exchange_bytes_per_step(self.M, self.g, self.S, itemsize,
                                        bc=self.bc, procs=self.procs,
-                                       coords=coords)
+                                       coords=coords, fields=self.channels)
 
     def vmem_bytes(self, itemsize: int = 4) -> int:
-        return fused_vmem_bytes(self.T, self.g, self.S, itemsize)
+        return fused_vmem_bytes(self.T, self.g, self.S, itemsize,
+                                fields=self.channels)

@@ -59,6 +59,23 @@ def test_compare_keys_threshold_pins_model_keys():
     assert not reg and any("fused_bytes_per_substep" in n for n in notes)
 
 
+def test_compare_notes_disappearing_pinned_key():
+    """A still-present row that stops emitting a pinned key is reported
+    as churn (visible, never fatal) instead of silently skipped."""
+    old = _rows(a=100.0)
+    new = _rows(a=100.0)
+    del new["a"]["derived"]["fused_bytes_per_substep"]
+    reg, notes = compare(old, new, threshold=100.0, min_us=50.0,
+                         keys=["fused_bytes_per_substep"], keys_threshold=0.0)
+    assert not reg
+    assert any("disappeared" in n for n in notes)
+    # a key absent on BOTH sides (schema predates it) stays silent
+    del old["a"]["derived"]["fused_bytes_per_substep"]
+    reg, notes = compare(old, new, threshold=100.0, min_us=50.0,
+                         keys=["fused_bytes_per_substep"], keys_threshold=0.0)
+    assert not reg and not notes
+
+
 def test_main_keys_threshold_flag(tmp_path):
     rows_old = _rows(r=100.0)
     rows_new = _rows(r=100.0)

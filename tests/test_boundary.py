@@ -30,8 +30,9 @@ import numpy as np
 import pytest
 
 from repro.core import (COLUMN_MAJOR, HILBERT, MORTON, NEUMANN0, PERIODIC,
-                        ROW_MAJOR, BoundarySpec, apply_ordering, as_boundary,
-                        blockize, boundary_face_table, dirichlet, pad_cube,
+                        ROW_MAJOR, BoundarySpec, MixedBoundary, apply_ordering,
+                        as_boundary, axes_periodic, blockize,
+                        boundary_face_table, dirichlet, mixed, pad_cube,
                         unblockize)
 from repro.core.neighbors import neighbor_table_device, ring_perms
 from repro.kernels import ref as kref
@@ -365,6 +366,120 @@ def test_shard_substeps_clamped_single_shard_matches_oracle(use_kernel):
         got = np.asarray(unblockize(fn(store), M, kind="morton"))
         np.testing.assert_array_equal(got, _oracle_run(cube, g, bc, S),
                                       err_msg=bc.kind)
+
+
+# --------------------------------------------- per-face mixed contracts (§8)
+def test_mixed_boundary_contract():
+    """mixed() coerces strings per axis, collapses uniform triples, and
+    exposes the shared per-axis view every consumer reads."""
+    duct = mixed(k="neumann0")
+    assert isinstance(duct, MixedBoundary) and duct.kind == "mixed"
+    assert duct.clamped and [a.kind for a in duct.axes] == \
+        ["neumann0", "periodic", "periodic"]
+    assert axes_periodic(duct) == (False, True, True)
+    assert mixed(k=NEUMANN0, i=NEUMANN0, j=NEUMANN0) == NEUMANN0  # collapse
+    assert mixed() == PERIODIC
+    assert as_boundary(duct) is duct
+    assert axes_periodic(PERIODIC) == (True, True, True)
+    assert axes_periodic(NEUMANN0) == (False, False, False)
+    assert PERIODIC.axes == (PERIODIC,) * 3  # uniform specs self-expose
+    assert hash(duct) == hash(mixed(k="neumann0"))  # jit-static key
+    with pytest.raises(ValueError):
+        MixedBoundary("neumann0", PERIODIC, PERIODIC)  # specs, not strings
+
+
+def test_mixed_pad_cube_per_axis():
+    """pad_cube under a mixed contract pads each axis under its own spec
+    in k,i,j order — wrap on periodic axes includes clamped ghosts."""
+    c = _cube(4, "jacobi")
+    duct = mixed(k=dirichlet(2.0))
+    got = np.asarray(pad_cube(jnp.asarray(c), 1, duct))
+    want = np.pad(c, [(1, 1), (0, 0), (0, 0)], constant_values=2.0)
+    want = np.pad(want, [(0, 0), (1, 1), (1, 1)], mode="wrap")
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mixed_neighbor_table_per_axis():
+    """The block table wraps on periodic axes and clamps on clamped ones
+    — per axis, from one periodic=(…) knob."""
+    from repro.core.neighbors import neighbor_table
+
+    nt = 4
+    per = neighbor_table("row_major", nt, periodic=True)
+    cla = neighbor_table("row_major", nt, periodic=False)
+    mix = neighbor_table("row_major", nt, periodic=(False, True, True))
+    # row_major path position == linear block id, so rows index directly
+    np.testing.assert_array_equal(mix[:, 13], per[:, 13])
+    # a k-edge, i/j-interior block: k-offsets clamp, i/j offsets wrap
+    k_lo_col = 4       # offset (-1, 0, 0): column 0*9 + 1*3 + 1
+    blk = 0 * nt * nt + 2 * nt + 2   # (k=0, i=2, j=2)
+    assert mix[blk, k_lo_col] == cla[blk, k_lo_col] != per[blk, k_lo_col]
+    j_lo_col = 12      # offset (0, 0, -1): column 1*9 + 1*3 + 0
+    blk_j = 2 * nt * nt + 2 * nt + 0  # (k=2, i=2, j=0): j wraps under mix
+    assert mix[blk_j, j_lo_col] == per[blk_j, j_lo_col] \
+        != cla[blk_j, j_lo_col]
+    assert not np.array_equal(mix, per)
+
+
+@pytest.mark.parametrize("kind", ["morton", "hilbert"])
+def test_resident_mixed_matches_oracle(kind):
+    """Acceptance: clamped k + periodic i/j through the fused resident
+    pipeline (kernel and oracle) == the per-axis padded-cube oracle,
+    bit-identical, S-deep."""
+    M, T, g, S = 16, 8, 1, 4
+    duct = mixed(k=NEUMANN0)
+    cube = _cube(M)
+    deep = ResidentPipeline(M=M, T=T, g=g, kind=kind, S=S, bc=duct,
+                            use_kernel=True)
+    seq = ResidentPipeline(M=M, T=T, g=g, kind=kind, S=1, bc=duct)
+    a = np.asarray(deep.run(jnp.asarray(cube), S))
+    np.testing.assert_array_equal(a, np.asarray(seq.run(jnp.asarray(cube), S)))
+    np.testing.assert_array_equal(a, _oracle_run(cube, g, duct, S))
+
+
+def test_mixed_exchange_model_per_axis():
+    """Only the clamped axis shrinks: periodic axes keep the full 2-face
+    volume, the clamped axis counts existing neighbours."""
+    M, g, S = 16, 1, 4
+    sizes = exchange_face_items(M, g, S)
+    duct = mixed(k=NEUMANN0)
+    per = exchange_items_per_exchange(M, g, S)
+    corner = exchange_items_per_exchange(M, g, S, bc=duct, procs=(2, 2, 2),
+                                         coords=(0, 0, 0))
+    # k contributes 1 face (one neighbour), i/j the full 2 faces each
+    assert corner == sizes[0] + 2 * sizes[1] + 2 * sizes[2]
+    assert corner < per
+    mean = exchange_items_per_exchange(M, g, S, bc=duct, procs=(2, 2, 2))
+    assert mean == sizes[0] * 2 * (2 - 1) / 2 + 2 * sizes[1] + 2 * sizes[2]
+    # a fully periodic mixed spec never needs procs
+    assert exchange_items_per_exchange(M, g, S, bc=mixed()) == per
+    with pytest.raises(ValueError):
+        exchange_items_per_exchange(M, g, S, bc=duct)  # clamped k needs procs
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_shard_substeps_mixed_single_shard_matches_oracle(use_kernel):
+    """One mixed deep round on a 1×1×1 mesh == S mixed oracle steps, and
+    the jaxpr carries ppermute pairs for the periodic axes only."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    M, T, g, S = 16, 8, 1, 4
+    duct = mixed(k=NEUMANN0)
+    mesh = make_stencil_mesh((1, 1, 1))
+    cube = _cube(M)
+    store = blockize(jnp.asarray(cube), T, kind="hilbert")
+    fn = shard_map(
+        lambda st: shard_substeps(st, kind="hilbert", M=M, g=g, S=S,
+                                  bc=duct, use_kernel=use_kernel),
+        mesh=mesh, in_specs=P(), out_specs=P(), check_rep=False)
+    got = np.asarray(unblockize(fn(store), M, kind="hilbert"))
+    np.testing.assert_array_equal(got, _oracle_run(cube, g, duct, S))
+    # structural: the clamped k ring is empty, the periodic i/j rings
+    # keep their (self-send) pairs — ppermute pairs on periodic axes only
+    perms = [p for p in
+             _collect_ppermute_perms(jax.make_jaxpr(fn)(store).jaxpr) if p]
+    assert len(perms) == 4  # 2 ppermutes × 2 periodic axes; k's are empty
 
 
 # --------------------------------------- clamped acceptance matrix (≥ 8 dev)

@@ -21,7 +21,8 @@ def _checker():
 
 
 def test_docs_tree_exists():
-    expected = {"quickstart.md", "orderings.md", "pipelines.md"}
+    expected = {"quickstart.md", "orderings.md", "pipelines.md",
+                "benchmarks.md"}
     have = {f for f in os.listdir(os.path.join(REPO, "docs"))
             if f.endswith(".md")}
     assert expected <= have, have
@@ -35,7 +36,7 @@ def test_design_section_refs_resolve():
     mod = _checker()
     sections = mod.design_sections()
     # the load-bearing sections the docstrings cite
-    assert {"1", "2", "3", "4", "5", "6", "7", "8"} <= sections
+    assert {"1", "2", "3", "4", "5", "6", "7", "8", "9"} <= sections
     assert mod.check_design_refs() == []
 
 

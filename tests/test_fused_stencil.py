@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import MORTON, blockize
+from repro.core import MORTON, blockize, blockize_fields
 from repro.core.neighbors import neighbor_table_device
 from repro.kernels import ref
 from repro.kernels.ops import uniform_weights
@@ -35,10 +35,14 @@ M, T, G = 16, 8, 1
 
 
 def _store(kind, rule):
+    C = get_rule(rule).channels
     if rule == "gol":
         cube = (rng.random((M, M, M)) < 0.3).astype(np.float32)
-    else:
+    elif C == 1:
         cube = rng.normal(size=(M, M, M)).astype(np.float32)
+    else:  # stacked multi-field state (DESIGN.md §9)
+        fields = rng.normal(size=(C, M, M, M)).astype(np.float32)
+        return blockize_fields(jnp.asarray(fields), T, kind=kind)
     return blockize(jnp.asarray(cube), T, kind=kind)
 
 
@@ -51,29 +55,36 @@ def _seq_kernel(store, w, nbr, steps, rule):
 # ------------------------------------------------------- fused bit-identity
 @pytest.mark.parametrize("kind", KINDS)
 @pytest.mark.parametrize("S", [1, 2, 4])
-@pytest.mark.parametrize("rule", ["gol", "jacobi"])
+@pytest.mark.parametrize("rule", ["gol", "jacobi", "wave"])
 def test_fused_kernel_matches_sequential_seed_steps(kind, S, rule):
-    """One fused S-substep launch == S sequential seed-step launches."""
+    """One fused S-substep launch == S sequential seed-step launches —
+    the kernel-family matrix, now spanning the multi-field C=2 wave
+    store (DESIGN.md §9) next to the scalar rules."""
     w = uniform_weights(G)
     nbr = neighbor_table_device(kind, M // T)
     store = _store(kind, rule)
+    r = get_rule(rule)
     fused = stencil_step_fused(store, w, nbr, g=G, S=S, rule=rule)
     seq = _seq_kernel(store, w, nbr, S, rule)
     np.testing.assert_array_equal(np.asarray(fused), np.asarray(seq))
     # the jnp oracle of the fused form matches its own sequential form...
     oracle = ref.stencil_fused_ref(store, w, nbr, S=S, rule=rule)
-    r = get_rule(rule)
     oseq = store
     for _ in range(S):
-        neigh = ref.stencil_sum_resident_ref(oseq, w, nbr)
+        if r.channels == 1:
+            neigh = ref.stencil_sum_resident_ref(oseq, w, nbr)
+        else:  # per-channel tap sums of the stacked store
+            neigh = jnp.stack([ref.stencil_sum_resident_ref(oseq[c], w, nbr)
+                               for c in range(r.channels)])
         oseq = r.apply(oseq.astype(jnp.float32), neigh, G).astype(store.dtype)
     np.testing.assert_array_equal(np.asarray(oracle), np.asarray(oseq))
-    # ...and the kernel cross-family: exact for gol, allclose for jacobi
-    if rule == "gol":
-        np.testing.assert_array_equal(np.asarray(fused), np.asarray(oracle))
-    else:
+    # ...and the kernel cross-family: exact for gol (integer sums) and
+    # wave (FMA-immune by construction), allclose for jacobi (divide)
+    if rule == "jacobi":
         np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
                                    rtol=1e-5, atol=1e-5)
+    else:
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(oracle))
 
 
 def test_fused_identity_rule_is_raw_stencil_sum():
