@@ -70,6 +70,7 @@ def rows(sizes=(32, 64), stencils=(1, 2)):
     out += resident_rows(sizes=sizes, stencils=stencils)
     out += clamped_rows(sizes=sizes)
     out += multifield_rows(sizes=sizes)
+    out += checkpoint_rows(M=min(sizes))
     return out
 
 
@@ -197,6 +198,69 @@ def multifield_rows(sizes=(32, 64), g=1, T=8, n_steps=N_ITERS):
                     f"steps_per_s={n_steps / dt:.1f};"
                     + multifield_derived(M, T, g, S, n_steps),
                 ))
+    return out
+
+
+def checkpoint_rows(M=32, g=1, T=8, S=4, intervals=(16, 64), n_steps=64):
+    """Checkpoint overhead of the fault-tolerant runner (DESIGN.md §10):
+    a CheckpointedRun vs the plain fused run over the same n_steps, at
+    interval ∈ {16, 64}.
+
+    ``derived`` stamps both sides of the model/measure pair: the
+    modelled snapshot bytes per interval (`ckpt_bytes_per_interval`,
+    deterministic — CI pins it exactly) next to the bytes actually on
+    disk for one checkpoint dir (`ckpt_bytes_measured`, npz + manifest
+    container overhead included), and the modelled traffic fraction
+    (`ckpt_model_fraction`, shared accounting) next to the measured
+    wall-clock fraction spent checkpointing (`ckpt_wall_fraction`).
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro.stencil import (CheckpointedRun, checkpoint_bytes_per_interval,
+                               checkpoint_traffic_fraction)
+
+    out = []
+    rng = np.random.default_rng(0)
+    state0 = (rng.random((M, M, M)) < 0.35).astype(np.float32)
+    pipe = ResidentPipeline(M=M, T=T, g=g, kind="hilbert", S=S)
+    # plain fused run (no checkpointing), same chunk structure as the
+    # runner would use so the comparison isolates snapshot+write cost
+    run = pipe.run_fn(n_steps)
+    jax.block_until_ready(run(pipe.to_blocks(jnp.asarray(state0))))  # warm
+    store = pipe.to_blocks(jnp.asarray(state0))
+    t0 = time.perf_counter()
+    jax.block_until_ready(run(store))
+    t_plain = time.perf_counter() - t0
+    for interval in intervals:
+        d = tempfile.mkdtemp(prefix="bench_ckpt_")
+        try:
+            cr = CheckpointedRun(pipe, d, interval=interval)
+            cr.run(state0, n_steps)  # warm (compiles the chunk runners)
+            shutil.rmtree(d)
+            t0 = time.perf_counter()
+            cr.run(state0, n_steps)
+            t_ckpt = time.perf_counter() - t0
+            step_dir = os.path.join(d, f"step_{interval:08d}")
+            measured = sum(
+                os.path.getsize(os.path.join(step_dir, f))
+                for f in os.listdir(step_dir))
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+        model_b = checkpoint_bytes_per_interval(M)
+        model_f = checkpoint_traffic_fraction(M, T, g, interval, S=S)
+        wall_f = max(0.0, t_ckpt - t_plain) / t_ckpt
+        out.append((
+            f"checkpoint/run_M{M}_g{g}_T{T}_S{S}_int{interval}",
+            t_ckpt * 1e6 / n_steps,
+            f"steps_per_s={n_steps / t_ckpt:.1f};fields=1"
+            f";ckpt_interval={interval}"
+            f";ckpt_bytes_per_interval={model_b}"
+            f";ckpt_bytes_measured={measured}"
+            f";ckpt_model_fraction={model_f:.4f}"
+            f";ckpt_wall_fraction={wall_f:.4f}",
+        ))
     return out
 
 

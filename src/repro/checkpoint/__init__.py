@@ -1,4 +1,7 @@
 """Atomic, manifest-driven, elastic checkpointing."""
 
 from . import ckpt  # noqa: F401
-from .ckpt import save, save_async, wait, restore, latest_step  # noqa: F401
+from .ckpt import (  # noqa: F401
+    CheckpointCorruptError, latest_step, restore, save, save_async,
+    valid_steps, wait,
+)

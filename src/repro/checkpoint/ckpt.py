@@ -4,14 +4,28 @@ Layout of a checkpoint directory::
 
     <dir>/step_000123/          # finished checkpoints only (atomic rename)
         manifest.json           # step, data cursor, rng, tree structure,
-                                # leaf shapes/dtypes, shard chunking
+                                # leaf shapes/dtypes, shard chunking,
+                                # per-leaf crc32 checksums
         arrays_00.npz ...       # leaf chunks (bounded file size)
 
 Properties needed at 1000-node scale, realised here at container scale:
 
 - **Atomicity**: writes go to ``<dir>/.tmp_step_X`` and are renamed into
-  place only after fsync — a killed job never leaves a half checkpoint
-  that restore could pick up.
+  place only after every chunk file *and* the manifest are fsynced — a
+  killed job never leaves a half checkpoint that restore could pick up.
+- **Integrity**: the manifest records a crc32 per leaf; ``restore``
+  verifies them by default, so a truncated or bit-flipped chunk raises
+  :class:`CheckpointCorruptError` instead of silently resuming from
+  garbage.
+- **Degraded restore**: ``latest_step`` considers only *valid*
+  candidates (a ``step_*`` dir with a parseable manifest — dangling
+  ``.tmp_step_*`` dirs and manifest-less dirs are skipped, never
+  crashed on), and ``restore(step=None)`` falls back newest-first
+  through :func:`valid_steps`, quarantining corrupt dirs (renamed to
+  ``.corrupt_step_*``) so later scans skip them.
+- **Bounded retry**: ``save`` retries transient I/O failures with
+  exponential backoff before giving up, cleaning its temp dir between
+  attempts.
 - **Restart**: ``latest_step``/``restore`` resume bit-exact (optimizer
   state, data cursor and RNG key live in the manifest).
 - **Elasticity**: leaves are saved as *logical* (unsharded) arrays, so a
@@ -23,24 +37,34 @@ Properties needed at 1000-node scale, realised here at container scale:
   training steps; ``wait`` joins before the next save or exit.
 
 A production deployment would swap the npz writer for per-host sharded
-files + a distributed commit barrier; the manifest/atomic-rename protocol
-is unchanged.
+files + a distributed commit barrier; the manifest/atomic-rename
+protocol — and the validity/quarantine scan — are unchanged.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import shutil
 import threading
+import time
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "wait", "restore", "latest_step"]
+__all__ = ["save", "save_async", "wait", "restore", "latest_step",
+           "valid_steps", "CheckpointCorruptError"]
 
 _MAX_CHUNK_BYTES = 1 << 30
 _pending: list[threading.Thread] = []
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint dir exists but fails integrity checks (missing or
+    truncated chunk files, crc32 mismatch, unreadable manifest)."""
 
 
 def _flatten(tree, prefix=()):
@@ -62,17 +86,28 @@ def _unflatten(flat: dict[str, Any]):
     return root
 
 
-def save(ckpt_dir: str, step: int, tree: dict, *, meta: dict | None = None):
-    """Synchronous atomic save of a pytree-of-arrays."""
+def save(ckpt_dir: str, step: int, tree: dict, *, meta: dict | None = None,
+         retries: int = 2, backoff: float = 0.05):
+    """Synchronous atomic save of a pytree-of-arrays.
+
+    Transient ``OSError`` during the write is retried up to ``retries``
+    times with exponential backoff (the temp dir is removed between
+    attempts so every attempt starts clean); the last failure re-raises.
+    """
     host = {k: np.asarray(v) for k, v in _flatten(tree)}
-    _write(ckpt_dir, step, host, meta or {})
+    _write_with_retry(ckpt_dir, step, host, meta or {}, retries, backoff)
 
 
-def save_async(ckpt_dir: str, step: int, tree: dict, *, meta: dict | None = None):
-    """Snapshot to host now; write in background."""
+def save_async(ckpt_dir: str, step: int, tree: dict, *,
+               meta: dict | None = None, retries: int = 2,
+               backoff: float = 0.05):
+    """Snapshot to host now; write (with the same bounded retry) in
+    background."""
     host = {k: np.asarray(v) for k, v in _flatten(tree)}  # sync device->host
-    t = threading.Thread(target=_write, args=(ckpt_dir, step, host, meta or {}),
-                         daemon=True)
+    t = threading.Thread(
+        target=_write_with_retry,
+        args=(ckpt_dir, step, host, meta or {}, retries, backoff),
+        daemon=True)
     t.start()
     _pending.append(t)
 
@@ -80,6 +115,20 @@ def save_async(ckpt_dir: str, step: int, tree: dict, *, meta: dict | None = None
 def wait():
     while _pending:
         _pending.pop().join()
+
+
+def _write_with_retry(ckpt_dir: str, step: int, host: dict, meta: dict,
+                      retries: int, backoff: float):
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    for attempt in range(retries + 1):
+        try:
+            _write(ckpt_dir, step, host, meta)
+            return
+        except OSError:
+            shutil.rmtree(tmp, ignore_errors=True)
+            if attempt == retries:
+                raise
+            time.sleep(backoff * (2 ** attempt))
 
 
 def _write(ckpt_dir: str, step: int, host: dict[str, np.ndarray], meta: dict):
@@ -99,12 +148,16 @@ def _write(ckpt_dir: str, step: int, host: dict[str, np.ndarray], meta: dict):
             v = v.view(np.uint16 if v.dtype.itemsize == 2 else np.uint8)
         chunks[-1][k] = v
         index[k] = {"file": len(chunks) - 1, "shape": list(v.shape),
-                    "dtype": logical_dtype}
+                    "dtype": logical_dtype,
+                    "crc32": zlib.crc32(np.ascontiguousarray(v).tobytes())}
         size += v.nbytes
     for i, c in enumerate(chunks):
-        # npz keys cannot contain '/', escape
-        np.savez(os.path.join(tmp, f"arrays_{i:02d}.npz"),
-                 **{k.replace("/", "::"): v for k, v in c.items()})
+        # npz keys cannot contain '/', escape; fsync each chunk so the
+        # final rename publishes only fully-durable data files
+        with open(os.path.join(tmp, f"arrays_{i:02d}.npz"), "wb") as f:
+            np.savez(f, **{k.replace("/", "::"): v for k, v in c.items()})
+            f.flush()
+            os.fsync(f.fileno())
     manifest = {"step": step, "index": index, "meta": meta,
                 "n_chunks": len(chunks)}
     mpath = os.path.join(tmp, "manifest.json")
@@ -113,43 +166,138 @@ def _write(ckpt_dir: str, step: int, host: dict[str, np.ndarray], meta: dict):
         f.flush()
         os.fsync(f.fileno())
     if os.path.exists(final):  # overwrite-save of same step
-        import shutil
         shutil.rmtree(final)
     os.rename(tmp, final)
 
 
-def latest_step(ckpt_dir: str) -> int | None:
-    if not os.path.isdir(ckpt_dir):
+def _read_manifest(d: str) -> dict | None:
+    """The dir's manifest, or None when missing/unparseable (a partial
+    or torn checkpoint — never an exception)."""
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
 
 
-def restore(ckpt_dir: str, step: int | None = None, *,
-            shardings=None) -> tuple[dict, dict]:
-    """Returns (tree, meta). ``shardings``: optional matching pytree of
-    jax.sharding.Sharding — enables elastic restore onto a new mesh."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
+def valid_steps(ckpt_dir: str) -> list[int]:
+    """Sorted steps of every *candidate* checkpoint: a ``step_*`` dir
+    whose manifest parses. Dangling ``.tmp_step_*`` dirs, quarantined
+    ``.corrupt_step_*`` dirs, manifest-less and torn-manifest dirs are
+    all skipped (a crashed or interfering writer must never take
+    restore down). Chunk contents are *not* verified here — that is
+    restore's job (crc32 per leaf)."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if not d.startswith("step_"):
+            continue
+        try:
+            step = int(d.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if _read_manifest(os.path.join(ckpt_dir, d)) is not None:
+            steps.append(step)
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step with a readable manifest (None when there is none)."""
+    steps = valid_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _quarantine(ckpt_dir: str, step: int) -> None:
+    """Rename a corrupt ``step_*`` dir to ``.corrupt_step_*`` so later
+    ``valid_steps`` scans skip it without re-verifying. Best-effort: a
+    failed rename (e.g. read-only fs) must not mask the original
+    corruption."""
+    src = os.path.join(ckpt_dir, f"step_{step:08d}")
+    dst = os.path.join(ckpt_dir, f".corrupt_step_{step:08d}")
+    try:
+        if os.path.exists(dst):
+            shutil.rmtree(dst)
+        os.rename(src, dst)
+    except OSError:
+        pass
+
+
+def _load(d: str, verify: bool) -> tuple[dict, dict]:
+    """Load one checkpoint dir -> (flat leaves, manifest). Raises
+    CheckpointCorruptError on any integrity failure."""
+    manifest = _read_manifest(d)
+    if manifest is None:
+        raise CheckpointCorruptError(f"missing/unreadable manifest in {d}")
     import ml_dtypes  # bundled with jax
 
     loaded: dict[str, np.ndarray] = {}
     index = manifest["index"]
     for i in range(manifest["n_chunks"]):
-        with np.load(os.path.join(d, f"arrays_{i:02d}.npz")) as z:
-            for k in z.files:
-                key = k.replace("::", "/")
-                v = z[k]
-                want = index[key]["dtype"]
-                if str(v.dtype) != want:  # un-view non-native dtypes
-                    v = v.view(np.dtype(getattr(ml_dtypes, want)))
-                loaded[key] = v
+        path = os.path.join(d, f"arrays_{i:02d}.npz")
+        try:
+            with np.load(path) as z:
+                for k in z.files:
+                    key = k.replace("::", "/")
+                    v = z[k]
+                    loaded[key] = v
+        except (OSError, ValueError, EOFError, zlib.error,
+                zipfile.BadZipFile) as e:
+            raise CheckpointCorruptError(
+                f"unreadable chunk {path}: {e}") from e
+    for key, entry in index.items():
+        if key not in loaded:
+            raise CheckpointCorruptError(f"leaf {key!r} missing from {d}")
+        v = loaded[key]
+        want_crc = entry.get("crc32")  # absent in pre-integrity checkpoints
+        if verify and want_crc is not None:
+            got = zlib.crc32(np.ascontiguousarray(v).tobytes())
+            if got != want_crc:
+                raise CheckpointCorruptError(
+                    f"crc mismatch for leaf {key!r} in {d}: "
+                    f"{got:#010x} != {want_crc:#010x}")
+        want = entry["dtype"]
+        if str(v.dtype) != want:  # un-view non-native dtypes
+            v = v.view(np.dtype(getattr(ml_dtypes, want)))
+        loaded[key] = v
+    return loaded, manifest
+
+
+def restore(ckpt_dir: str, step: int | None = None, *,
+            shardings=None, verify: bool = True,
+            quarantine: bool = True) -> tuple[dict, dict]:
+    """Returns (tree, meta). ``shardings``: optional matching pytree of
+    jax.sharding.Sharding — enables elastic restore onto a new mesh.
+
+    ``verify`` (default on) checks every leaf against its manifest crc32.
+    With ``step=None`` the newest valid checkpoint is tried first and
+    corrupt/partial dirs **fall back** to the next older one (the dir is
+    quarantined — renamed ``.corrupt_step_*`` — unless
+    ``quarantine=False``); an explicit ``step`` raises
+    :class:`CheckpointCorruptError` instead of falling back.
+    """
+    if step is not None:
+        loaded, manifest = _load(
+            os.path.join(ckpt_dir, f"step_{step:08d}"), verify)
+        return _finish(loaded, manifest, shardings)
+    last_err: Exception | None = None
+    for cand in reversed(valid_steps(ckpt_dir)):
+        try:
+            loaded, manifest = _load(
+                os.path.join(ckpt_dir, f"step_{cand:08d}"), verify)
+            return _finish(loaded, manifest, shardings)
+        except CheckpointCorruptError as e:
+            last_err = e
+            if quarantine:
+                _quarantine(ckpt_dir, cand)
+    if last_err is not None:
+        raise FileNotFoundError(
+            f"no restorable checkpoint under {ckpt_dir} "
+            f"(newest failures: {last_err})")
+    raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+
+
+def _finish(loaded: dict, manifest: dict, shardings) -> tuple[dict, dict]:
     tree = _unflatten(loaded)
     if shardings is not None:
         flat_s = dict(_flatten(shardings))

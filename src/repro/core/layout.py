@@ -141,11 +141,23 @@ def store_spec(kind: str, T: int) -> OrderingSpec:
     return OrderingSpec("hybrid", tile=T, outer=kind, inner="row_major")
 
 
+def _check_blockable(M: int, T: int) -> int:
+    """nt of an (M,M,M) cube split into T³ blocks — a clear error, not a
+    bare assert: the layout boundary is where an elastic restore first
+    meets a mismatched (M, T) target (DESIGN.md §10)."""
+    nt, rem = divmod(M, T)
+    if rem or nt < 1:
+        raise ValueError(f"block edge T={T} does not tile cube edge M={M}")
+    return nt
+
+
 def blockize(x: jnp.ndarray, T: int, kind: str = "morton") -> jnp.ndarray:
     """(M,M,M) -> (nb, T, T, T) with blocks in ``kind`` curve order."""
     M = x.shape[0]
-    nt = M // T
-    assert nt * T == M
+    if x.shape != (M, M, M):
+        raise ValueError(f"blockize needs a cubic (M,M,M) state, "
+                         f"got {x.shape}")
+    nt = _check_blockable(M, T)
     x6 = x.reshape(nt, T, nt, T, nt, T).transpose(0, 2, 4, 1, 3, 5)  # (nt,nt,nt,T,T,T)
     flat = x6.reshape(nt ** 3, T, T, T)
     return flat[_block_perm_device(kind, nt, False)]
@@ -154,8 +166,10 @@ def blockize(x: jnp.ndarray, T: int, kind: str = "morton") -> jnp.ndarray:
 def unblockize(blocks: jnp.ndarray, M: int, kind: str = "morton") -> jnp.ndarray:
     """Inverse of :func:`blockize`."""
     nb, T = blocks.shape[0], blocks.shape[1]
-    nt = M // T
-    assert nb == nt ** 3
+    nt = _check_blockable(M, T)
+    if nb != nt ** 3:
+        raise ValueError(f"store has {nb} blocks, M={M}, T={T} "
+                         f"implies {nt ** 3}")
     x6 = blocks[_block_perm_device(kind, nt, True)]
     x6 = x6.reshape(nt, nt, nt, T, T, T).transpose(0, 3, 1, 4, 2, 5)
     return x6.reshape(M, M, M)
@@ -174,9 +188,10 @@ def blockize_fields(fields: jnp.ndarray, T: int,
     if fields.ndim == 3:
         fields = fields[None]
     C, M = fields.shape[0], fields.shape[1]
-    nt = M // T
-    assert fields.shape == (C, M, M, M), fields.shape
-    assert nt * T == M, (M, T)
+    if fields.shape != (C, M, M, M):
+        raise ValueError(f"blockize_fields needs (C,M,M,M) stacked "
+                         f"fields, got {fields.shape}")
+    nt = _check_blockable(M, T)
     x7 = fields.reshape(C, nt, T, nt, T, nt, T).transpose(0, 1, 3, 5, 2, 4, 6)
     flat = x7.reshape(C, nt ** 3, T, T, T)
     return jnp.take(flat, _block_perm_device(kind, nt, False), axis=1)
@@ -186,8 +201,10 @@ def unblockize_fields(store: jnp.ndarray, M: int,
                       kind: str = "morton") -> jnp.ndarray:
     """Inverse of :func:`blockize_fields`: (C, nb, T³) -> (C, M, M, M)."""
     C, nb, T = store.shape[0], store.shape[1], store.shape[2]
-    nt = M // T
-    assert nb == nt ** 3, (store.shape, M)
+    nt = _check_blockable(M, T)
+    if nb != nt ** 3:
+        raise ValueError(f"store has {nb} blocks, M={M}, T={T} "
+                         f"implies {nt ** 3}")
     x7 = jnp.take(store, _block_perm_device(kind, nt, True), axis=1)
     x7 = x7.reshape(C, nt, nt, nt, T, T, T).transpose(0, 1, 4, 2, 5, 3, 6)
     return x7.reshape(C, M, M, M)

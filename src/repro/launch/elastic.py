@@ -21,6 +21,16 @@ if __name__ == "__main__":  # set before jax init — see dryrun.py
     _ap.add_argument("--devices", type=int, default=8)
     _ap.add_argument("--from-shape", default="4,2")
     _ap.add_argument("--to-shape", default="2,2")
+    _ap.add_argument("--stencil", action="store_true",
+                     help="elastic-reshard a checkpointed stencil run "
+                          "instead of the training loop")
+    _ap.add_argument("--from-mesh", default="2,2,2")
+    _ap.add_argument("--to-mesh", default="1,1,1")
+    _ap.add_argument("--local-M", type=int, default=8,
+                     help="per-shard cube edge on the FROM mesh")
+    _ap.add_argument("--steps", type=int, default=12)
+    _ap.add_argument("--interval", type=int, default=4)
+    _ap.add_argument("--kill-at", type=int, default=6)
     _ARGS = _ap.parse_args()
     os.environ["XLA_FLAGS"] = (
         f"--xla_force_host_platform_device_count={_ARGS.devices}")
@@ -108,5 +118,66 @@ def main():
     print("[elastic] OK")
 
 
+def stencil_main(a):
+    """Elastic reshard of a *stencil* run (DESIGN.md §10): kill a
+    checkpointed run mid-flight on mesh A, resume it on mesh B with a
+    different ordering/T/S, and assert the final state is bit-identical
+    to an uninterrupted single-device run.
+
+        python -m repro.launch.elastic --stencil --devices 8 \
+            --from-mesh 2,2,2 --to-mesh 1,1,1 --local-M 8
+    """
+    import shutil
+
+    from repro.launch.faults import (FaultPlan, SimulatedCrash,
+                                     initial_state)
+    from repro.stencil import (CheckpointedRun, DistributedPipeline,
+                               ResidentPipeline, make_stencil_mesh)
+    from repro.core import HILBERT, MORTON
+
+    ckpt_dir = "/tmp/repro_elastic_stencil"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)
+    procs_a = tuple(int(x) for x in a.from_mesh.split(","))
+    procs_b = tuple(int(x) for x in a.to_mesh.split(","))
+    gshape = tuple(p * a.local_M for p in procs_a)
+    locals_b = {g // p for g, p in zip(gshape, procs_b)}
+    if len(locals_b) != 1:
+        raise SystemExit(f"to-mesh {procs_b} gives non-cubic locals over "
+                         f"global {gshape}")
+    local_b = locals_b.pop()
+    state0 = initial_state("gol", gshape, seed=0)
+
+    # --- phase 1: run on mesh A, die at --kill-at (before its checkpoint)
+    pipe_a = DistributedPipeline(mesh=make_stencil_mesh(procs_a),
+                                 spec=HILBERT, M=a.local_M, T=8, S=2)
+    run_a = CheckpointedRun(pipe_a, ckpt_dir, interval=a.interval,
+                            hooks=FaultPlan(kill_at_step=a.kill_at,
+                                            kill_mode="raise").hooks())
+    try:
+        run_a.run(state0, a.steps)
+        raise SystemExit("injected kill did not fire")
+    except SimulatedCrash:
+        print(f"[elastic] mesh {procs_a} killed at step {a.kill_at}")
+
+    # --- phase 2: resume on mesh B (lost slice), new ordering/T/S
+    pipe_b = DistributedPipeline(mesh=make_stencil_mesh(procs_b),
+                                 spec=MORTON, M=local_b, T=4, S=1)
+    out = CheckpointedRun(pipe_b, ckpt_dir,
+                          interval=a.interval).run(state0, a.steps)
+    print(f"[elastic] resumed on mesh {procs_b} to step {a.steps}")
+
+    # --- reference: uninterrupted resident run over the same global box
+    if len(set(gshape)) == 1:
+        ref_pipe = ResidentPipeline(M=gshape[0], T=8, S=1, kind="hilbert")
+        ref = np.asarray(ref_pipe.run(jnp.asarray(state0), a.steps))
+        np.testing.assert_array_equal(out, ref)
+        print(f"[elastic] reshard {procs_a} -> {procs_b}: "
+              f"state bit-exact vs uninterrupted run")
+    print("[elastic] OK")
+
+
 if __name__ == "__main__":
-    main()
+    if _ARGS.stencil:
+        stencil_main(_ARGS)
+    else:
+        main()

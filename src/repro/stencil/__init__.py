@@ -3,6 +3,7 @@
 from .gol3d import Gol3d, Gol3dConfig  # noqa: F401
 from .pipeline import (  # noqa: F401
     DistributedPipeline, ResidentPipeline, VMEM_BUDGET_BYTES,
+    checkpoint_bytes_per_interval, checkpoint_traffic_fraction,
     distributed_bytes_per_step, exchange_bytes_per_step, exchange_face_items,
     exchange_items_per_exchange, fused_items_per_launch, fused_vmem_bytes,
     repack_bytes_per_step, repack_items_per_step, resident_bytes_per_step,
@@ -12,4 +13,7 @@ from .domain import Decomposition3D, make_stencil_mesh, STENCIL_AXES  # noqa: F4
 from .halo import (  # noqa: F401
     exchange_shell, make_distributed_step, shard_boundary_flags, shard_state,
     shard_substeps, stencil_block_kind, surface_slab_scatter, unshard_state,
+)
+from .runner import (  # noqa: F401
+    CheckpointedRun, RunHealthError, RunHooks, health_check,
 )

@@ -427,21 +427,30 @@ def make_distributed_step(mesh: jax.sharding.Mesh, spec: OrderingSpec,
 
 def shard_state(cube: jnp.ndarray, spec: OrderingSpec,
                 procs: tuple[int, int, int]) -> jnp.ndarray:
-    """(GM,GM,GM) canonical cube -> (px,py,pz,M³) per-shard path state.
+    """(Gk,Gi,Gj) canonical state -> (px,py,pz,M³) per-shard path state.
 
-    Stacked multi-field input (C,GM,GM,GM) -> (px,py,pz,C,M³): every
+    Stacked multi-field input (C,Gk,Gi,Gj) -> (px,py,pz,C,M³): every
     channel shards identically and is path-ordered under ``spec``.
+    The global box may be non-cubic (a 4×2×1 mesh decomposes a
+    (4M, 2M, M) domain, DESIGN.md §10) — only the *local* shard must be
+    a cubic power-of-2 block, because that is what the SFC machinery
+    orders.
     """
     from repro.core.layout import _perm_device
 
     squeeze = cube.ndim == 3
     if squeeze:
         cube = cube[None]
-    C, GM = cube.shape[0], cube.shape[1]
+    C = cube.shape[0]
+    gk, gi, gj = cube.shape[1:]
     px, py, pz = procs
-    assert GM % px == 0 and GM % py == 0 and GM % pz == 0, (GM, procs)
-    lk, li, lj = GM // px, GM // py, GM // pz
-    assert lk == li == lj, "local block must be cubic"
+    if gk % px or gi % py or gj % pz:
+        raise ValueError(f"global shape {(gk, gi, gj)} does not divide "
+                         f"over procs {procs}")
+    lk, li, lj = gk // px, gi // py, gj // pz
+    if not (lk == li == lj):
+        raise ValueError(f"local block must be cubic, got {(lk, li, lj)} "
+                         f"from global {(gk, gi, gj)} over procs {procs}")
     parts = cube.reshape(C, px, lk, py, li, pz, lj) \
         .transpose(1, 3, 5, 0, 2, 4, 6)  # (px,py,pz,C,lk,li,lj)
     q = _perm_device(spec, lk, False)  # path pos -> rmo (apply_ordering)
@@ -450,9 +459,11 @@ def shard_state(cube: jnp.ndarray, spec: OrderingSpec,
 
 
 def unshard_state(state: jnp.ndarray, spec: OrderingSpec,
-                  global_M: int) -> jnp.ndarray:
+                  global_M=None) -> jnp.ndarray:
     """Inverse of :func:`shard_state` (C-stacked state comes back as
-    (C, GM, GM, GM))."""
+    (C, Gk, Gi, Gj)). ``global_M`` — a cube edge or (Gk,Gi,Gj) triple —
+    is optional: the global box is derivable from the state shape and
+    the argument is only checked against it when given."""
     from repro.core.layout import _perm_device
 
     squeeze = state.ndim == 4
@@ -461,8 +472,13 @@ def unshard_state(state: jnp.ndarray, spec: OrderingSpec,
     px, py, pz, C = state.shape[:4]
     lk = round(state.shape[4] ** (1 / 3))
     lk = next(m for m in (lk - 1, lk, lk + 1) if m ** 3 == state.shape[4])
+    shape = (px * lk, py * lk, pz * lk)
+    if global_M is not None:
+        want = (global_M,) * 3 if isinstance(global_M, int) else tuple(global_M)
+        if want != shape:
+            raise ValueError(f"state {state.shape} implies global {shape}, "
+                             f"caller said {want}")
     p = _perm_device(spec, lk, True)  # rmo -> path pos (undo_ordering)
     parts = jnp.take(state, p, axis=-1).reshape(px, py, pz, C, lk, lk, lk)
-    out = parts.transpose(3, 0, 4, 1, 5, 2, 6).reshape(C, global_M, global_M,
-                                                       global_M)
+    out = parts.transpose(3, 0, 4, 1, 5, 2, 6).reshape(C, *shape)
     return out[0] if squeeze else out

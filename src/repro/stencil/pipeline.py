@@ -74,6 +74,7 @@ __all__ = [
     "resident_unfused_items_per_step", "resident_unfused_bytes_per_step",
     "exchange_face_items", "exchange_items_per_exchange",
     "exchange_bytes_per_step", "distributed_bytes_per_step",
+    "checkpoint_bytes_per_interval", "checkpoint_traffic_fraction",
 ]
 
 # Conservative per-core VMEM working-set budget the autotuner plans
@@ -393,6 +394,36 @@ def _boundary_items(M: int) -> int:
     return 4 * M ** 3
 
 
+def checkpoint_bytes_per_interval(M, *, fields: int = 1,
+                                  itemsize: int = 4) -> int:
+    """Bytes one checkpoint writes: the canonical (curve-independent)
+    C-channel state of an M³ cube — or a non-cubic (Gk,Gi,Gj) box —
+    once per interval (stencil/runner.CheckpointedRun, DESIGN.md §10).
+
+    The snapshot is the *logical* state, so its size is ordering-, T-,
+    S- and mesh-independent: exactly ``C · ∏(shape) · itemsize`` payload
+    bytes (the npz container and manifest add O(KiB), not modelled).
+    """
+    gk, gi, gj = (M, M, M) if isinstance(M, int) else M
+    return fields * gk * gi * gj * itemsize
+
+
+def checkpoint_traffic_fraction(M: int, T: int, g: int, interval: int, *,
+                                S: int = 1, fields: int = 1,
+                                itemsize: int = 4) -> float:
+    """Modelled fraction of per-interval data movement spent on the
+    checkpoint: snapshot bytes (plus the unblockize read that produces
+    the canonical state) over snapshot + the interval's fused HBM
+    stream. The denominator uses the same shared accounting as every
+    benchmark row — this is the number the measured wall fraction in
+    benchmarks/stencil_update.py is compared against."""
+    snap = checkpoint_bytes_per_interval(M, fields=fields, itemsize=itemsize) \
+        + fields * M ** 3 * itemsize  # unblockize read of the store
+    compute = interval * fused_items_per_launch(M, T, g, S, fields=fields) \
+        / S * itemsize
+    return snap / (snap + compute)
+
+
 def exchange_face_items(M: int, g: int, S: int = 1) -> tuple[int, int, int]:
     """Per-axis items of ONE sent face at exchange depth h = S·g (single
     channel — the exchange helpers apply the ×C ``fields`` factor).
@@ -551,6 +582,14 @@ class DistributedPipeline:
         return tuple(self.mesh.shape[a] for a in STENCIL_AXES)
 
     @property
+    def global_shape(self) -> tuple[int, int, int]:
+        """Per-axis global extents: the mesh may be non-cubic (4×2×1 …,
+        DESIGN.md §10) as long as every *local* shard is a cubic
+        power-of-2 block."""
+        px, py, pz = self.procs
+        return (px * self.M, py * self.M, pz * self.M)
+
+    @property
     def global_M(self) -> int:
         px, py, pz = self.procs
         assert px == py == pz, self.procs
@@ -639,11 +678,13 @@ class DistributedPipeline:
         return self.run_fn(n_steps)(state)
 
     def run_cube(self, cube: jnp.ndarray, n_steps: int) -> jnp.ndarray:
-        """Convenience: shard a canonical global cube — stacked
-        (C,GM,GM,GM) fields for a multi-field rule — run, gather back."""
+        """Convenience: shard a canonical global state — (Gk,Gi,Gj), or
+        stacked (C,Gk,Gi,Gj) fields for a multi-field rule — run, gather
+        back. Non-cubic meshes decompose a non-cubic global box into
+        cubic M³ shards (DESIGN.md §10)."""
         st = shard_state(cube, self.spec, self.procs)
         st = self.run(st, n_steps)
-        return unshard_state(st, self.spec, self.global_M)
+        return unshard_state(st, self.spec, self.global_shape)
 
     # -- modelled traffic --------------------------------------------------
     def bytes_per_step(self, n_steps: int, itemsize: int = 4,

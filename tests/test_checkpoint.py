@@ -87,6 +87,57 @@ def test_elastic_restore_with_shardings(tmp_ckpt):
                                   np.asarray(tree["w"]))
 
 
+def test_crash_between_chunk_writes(tmp_ckpt, monkeypatch):
+    """A writer killed between chunk files leaves only a half-written
+    ``.tmp_step_*`` dir: restore never observes it and keeps serving the
+    previous checkpoint."""
+    ckpt.save(tmp_ckpt, 1, {"a": jnp.zeros(4), "b": jnp.ones(4)},
+              meta={"step": 1})
+    # force multi-chunk layout, then die (hard, not OSError — no retry,
+    # no cleanup, exactly like SIGKILL) on the second chunk write
+    monkeypatch.setattr(ckpt, "_MAX_CHUNK_BYTES", 8)
+    real_savez = np.savez
+    calls = {"n": 0}
+
+    def dying_savez(f, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise KeyboardInterrupt("killed mid-save")
+        return real_savez(f, **kw)
+
+    monkeypatch.setattr(np, "savez", dying_savez)
+    with pytest.raises(KeyboardInterrupt):
+        ckpt.save(tmp_ckpt, 5, {"a": jnp.arange(4.0), "b": jnp.arange(4.0)},
+                  meta={"step": 5})
+    assert os.path.isdir(os.path.join(tmp_ckpt, ".tmp_step_00000005"))
+    assert ckpt.valid_steps(tmp_ckpt) == [1]
+    _, meta = ckpt.restore(tmp_ckpt)
+    assert meta["step"] == 1
+
+
+def test_crash_between_fsync_and_rename(tmp_ckpt, monkeypatch):
+    """A writer killed after fsync but before the atomic rename leaves a
+    fully-written tmp dir — still invisible: the rename IS the commit."""
+    ckpt.save(tmp_ckpt, 2, {"x": jnp.zeros(4)}, meta={"step": 2})
+    real_rename = os.rename
+
+    def dying_rename(src, dst):
+        if ".tmp_step_" in str(src):
+            raise KeyboardInterrupt("killed pre-commit")
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(os, "rename", dying_rename)
+    with pytest.raises(KeyboardInterrupt):
+        ckpt.save(tmp_ckpt, 6, {"x": jnp.ones(4)}, meta={"step": 6})
+    monkeypatch.setattr(os, "rename", real_rename)
+    tmp = os.path.join(tmp_ckpt, ".tmp_step_00000006")
+    assert os.path.isfile(os.path.join(tmp, "manifest.json"))  # fully written
+    assert ckpt.latest_step(tmp_ckpt) == 2  # ...but never committed
+    got, meta = ckpt.restore(tmp_ckpt)
+    assert meta["step"] == 2
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.zeros(4))
+
+
 def test_overwrite_same_step(tmp_ckpt):
     ckpt.save(tmp_ckpt, 2, {"x": jnp.zeros(2)}, meta={"step": 2, "v": 1})
     ckpt.save(tmp_ckpt, 2, {"x": jnp.ones(2)}, meta={"step": 2, "v": 2})
