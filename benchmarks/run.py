@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV. Modules:
   halo_pack       — Figs 11/15 (pack timings + DMA runs)
   kernel_bench    — Pallas schedules scored by the paper's LRU model
   roofline_table  — §Roofline rows from the dry-run artefacts
+  roi             — ROI-query serving rows (range counts, bytes read)
 
 Flags:
   --fast          smaller sizes (CI-friendly)
@@ -63,7 +64,7 @@ def git_rev() -> str:
 
 def collect(fast: bool = False) -> list[tuple[str, float, str]]:
     from . import (cache_misses, halo_pack, kernel_bench, offset_hist,
-                   roofline_table, stencil_update)
+                   roi, roofline_table, stencil_update)
 
     sections = [
         offset_hist.rows(),
@@ -74,6 +75,7 @@ def collect(fast: bool = False) -> list[tuple[str, float, str]]:
                        widths=(1,) if fast else (1, 2)),
         kernel_bench.rows(),
         roofline_table.rows(),
+        roi.rows(sizes=(32,) if fast else (32, 64)),
     ]
     return [row for rows in sections for row in rows]
 

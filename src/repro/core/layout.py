@@ -13,6 +13,7 @@ kernel that walks blocks sequentially walks HBM contiguously.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +30,10 @@ __all__ = [
 
 _DEVICE_CONSTANTS: dict = {}
 _DEVICE_CONSTANTS_CAP = 256
+# The serving path (serve/service.py) queries from a thread pool while
+# pipelines trace on the main thread; every read-modify-write of the
+# LRU dict must hold this lock (move-to-end + eviction are not atomic).
+_DEVICE_CONSTANTS_LOCK = threading.RLock()
 
 
 def device_constant(key, build):
@@ -51,17 +56,24 @@ def device_constant(key, build):
     -ordered) dict, so hot permutation/neighbour tables survive a full
     sweep of one-off keys; eviction pops the front. Device buffers are
     large (an M=256 permutation is 64 MiB), hence the cap.
+
+    Thread-safe: concurrent misses on the same key may both build (the
+    build is pure — last insert wins, benign), but the dict itself is
+    only ever mutated under the lock, so a concurrent sweep can never
+    corrupt the LRU order or lose entries mid-eviction.
     """
-    hit = _DEVICE_CONSTANTS.get(key)
-    if hit is not None:
-        _DEVICE_CONSTANTS[key] = _DEVICE_CONSTANTS.pop(key)  # move-to-end
-        return hit
+    with _DEVICE_CONSTANTS_LOCK:
+        hit = _DEVICE_CONSTANTS.get(key)
+        if hit is not None:
+            _DEVICE_CONSTANTS[key] = _DEVICE_CONSTANTS.pop(key)  # move-to-end
+            return hit
     arr = build()
     if jax.core.trace_state_clean():
         arr = jnp.asarray(arr)
-        while len(_DEVICE_CONSTANTS) >= _DEVICE_CONSTANTS_CAP:
-            _DEVICE_CONSTANTS.pop(next(iter(_DEVICE_CONSTANTS)))
-        _DEVICE_CONSTANTS[key] = arr
+        with _DEVICE_CONSTANTS_LOCK:
+            while len(_DEVICE_CONSTANTS) >= _DEVICE_CONSTANTS_CAP:
+                _DEVICE_CONSTANTS.pop(next(iter(_DEVICE_CONSTANTS)))
+            _DEVICE_CONSTANTS[key] = arr
     return arr
 
 

@@ -34,7 +34,8 @@ from .hilbert import hilbert_encode, hilbert_encode3
 from .morton import morton_encode2, morton_encode3, morton_encode3_level
 
 __all__ = ["OrderingSpec", "ROW_MAJOR", "COLUMN_MAJOR", "MORTON", "HILBERT",
-           "rmo_to_path", "path_to_rmo", "path_index_2d", "ordering_from_name"]
+           "rmo_to_path", "path_to_rmo", "path_index_2d", "block_index_3d",
+           "ordering_from_name"]
 
 
 @dataclass(frozen=True)
@@ -121,6 +122,20 @@ def _flat_index(kind: str, k, i, j, M: int) -> np.ndarray:
     if kind == "hilbert":
         return hilbert_encode3(k, i, j, m)
     raise ValueError(f"unknown simple ordering {kind!r}")
+
+
+def block_index_3d(kind: str, k, i, j, n: int) -> np.ndarray:
+    """Curve index of 3-D grid coordinates under a *simple* ordering.
+
+    The public form of the block-grid path index: serve/roi.py maps the
+    block box of an ROI through this to get curve indices over the nt³
+    block grid (DESIGN.md §11), the same function the block store's
+    permutation is built from — so a range of these indices IS a
+    contiguous run of blocks in HBM. ``kind`` is one of
+    row_major | column_major | morton | hilbert; ``n`` the grid edge
+    (power of 2). Accepts scalars or arrays; returns int64.
+    """
+    return _flat_index(kind, k, i, j, n).astype(np.int64)
 
 
 @functools.lru_cache(maxsize=128)

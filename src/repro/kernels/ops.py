@@ -9,6 +9,7 @@ slow), and flip to the kernels on TPU deployment via config.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +77,9 @@ def gol3d_step(cube: jnp.ndarray, *, g: int, T: int = 8,
 
 _ROW_PLANS: dict = {}
 _ROW_PLANS_CAP = 256
+# Same contract as layout._DEVICE_CONSTANTS_LOCK: the serving thread
+# pool and the main trace thread share this LRU — mutate under the lock.
+_ROW_PLANS_LOCK = threading.RLock()
 
 
 def _row_plan(idx: np.ndarray, line: int, plan_key=None):
@@ -84,23 +88,27 @@ def _row_plan(idx: np.ndarray, line: int, plan_key=None):
     The np.unique/searchsorted plan depends only on (idx, line); callers
     with a stable idx provenance (pack_surface: one face of one ordering)
     pass ``plan_key`` so repeated packs of the same face skip the O(|idx|
-    log |idx|) host work. LRU-capped like layout.device_constant.
+    log |idx|) host work. LRU-capped (and lock-guarded) like
+    layout.device_constant; concurrent misses may both compute the plan
+    (pure — benign), the dict is only touched under the lock.
     """
     key = None if plan_key is None else (plan_key, line)
     if key is not None:
-        hit = _ROW_PLANS.get(key)
-        if hit is not None:
-            _ROW_PLANS[key] = _ROW_PLANS.pop(key)  # move-to-end
-            return hit
+        with _ROW_PLANS_LOCK:
+            hit = _ROW_PLANS.get(key)
+            if hit is not None:
+                _ROW_PLANS[key] = _ROW_PLANS.pop(key)  # move-to-end
+                return hit
     idx = np.asarray(idx)
     rows = np.unique(idx // line).astype(np.int32)
     pos = (np.searchsorted(rows, idx // line) * line + idx % line).astype(np.int32)
     rows.setflags(write=False)
     pos.setflags(write=False)
     if key is not None:  # numpy only — trace-safe to cache (cf. device_constant)
-        while len(_ROW_PLANS) >= _ROW_PLANS_CAP:
-            _ROW_PLANS.pop(next(iter(_ROW_PLANS)))
-        _ROW_PLANS[key] = (rows, pos)
+        with _ROW_PLANS_LOCK:
+            while len(_ROW_PLANS) >= _ROW_PLANS_CAP:
+                _ROW_PLANS.pop(next(iter(_ROW_PLANS)))
+            _ROW_PLANS[key] = (rows, pos)
     return rows, pos
 
 

@@ -174,6 +174,62 @@ def wipe(ckpt_dir: str) -> None:
     shutil.rmtree(ckpt_dir, ignore_errors=True)
 
 
+# -- serving fault matrix (serve/service.StencilQueryService) ---------------
+
+@dataclass
+class ServeFaultPlan:
+    """Declarative fault schedule for the ROI-query service — wraps the
+    service's ``fetch`` callable so every storage pathology of the
+    serving matrix (docs/serving.md) is injectable per fetch call:
+
+    fail_first:    first N fetch calls raise FetchError (transient
+                   storage failure; the service's bounded retry must
+                   absorb N <= max_retries, degrade beyond)
+    slow_first:    first N fetch calls advance the service clock (or
+                   really sleep) by ``slow_s`` before returning — the
+                   slow-storage / deadline-pressure fault
+    bitflip_first: first N fetch calls return a payload with one bit
+                   flipped — silent media corruption; the service's
+                   manifest crc must catch it (a typed retry, never a
+                   wrong payload)
+
+    Counters are mutable on purpose: one plan instance injects a finite
+    burst and then behaves — the recovery path is the object under test.
+    ``calls`` records every fetch the wrapped callable saw.
+    """
+    fail_first: int = 0
+    slow_first: int = 0
+    slow_s: float = 0.0
+    bitflip_first: int = 0
+    calls: int = 0
+
+    def wrap_fetch(self, fetch, *, sleep=None):
+        """``fetch(start, stop)`` with this plan's faults layered on.
+        ``sleep`` (default time.sleep) is injectable so tests can drive
+        a fake clock instead of waiting."""
+        import time as _time
+
+        from repro.serve.service import FetchError
+
+        do_sleep = _time.sleep if sleep is None else sleep
+
+        def faulty(start, stop):
+            self.calls += 1
+            n = self.calls
+            if n <= self.slow_first and self.slow_s > 0:
+                do_sleep(self.slow_s)
+            if n <= self.fail_first:
+                raise FetchError(f"injected fetch failure #{n} "
+                                 f"on range [{start}, {stop})")
+            data = np.array(fetch(start, stop))  # writable copy
+            if n <= self.fail_first + self.bitflip_first:
+                raw = data.reshape(-1).view(np.uint8)
+                raw[raw.size // 3] ^= 0x20
+            return data
+
+        return faulty
+
+
 # -- deterministic initial states (shared by CLI runs and tests) ------------
 
 def initial_state(rule: str, shape, seed: int = 0) -> np.ndarray:

@@ -1,3 +1,20 @@
-"""Serving: jit'd decode step + batched driver."""
+"""Serving: LM decode scaffold + the hardened stencil ROI-query service.
+
+Two front doors share this package (DESIGN.md §11):
+
+- the LM path: jit'd decode step + batched greedy driver
+  (serve_step.py, launch/serve.py's default mode);
+- the stencil path: axis-aligned ROI queries over the curve-ordered
+  block store — contiguous curve-range decomposition (roi.py) fronted
+  by a deadline/retry/integrity-hardened service (service.py,
+  ``launch/serve.py --stencil``).
+"""
 
 from .serve_step import make_serve_step, greedy_decode  # noqa: F401
+from .roi import (  # noqa: F401
+    ROI, StoreLayout, extract_roi, merge_blocks_to_ranges, ranges_to_blocks,
+    roi_model, roi_to_ranges,
+)
+from .service import (  # noqa: F401
+    FetchError, QUERY_STATUSES, QueryResult, StencilQueryService,
+)

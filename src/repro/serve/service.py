@@ -1,0 +1,381 @@
+"""Hardened ROI-query service over the curve-ordered block store.
+
+:class:`StencilQueryService` fronts a ``(C, nb, T³)`` block-store
+snapshot with the robustness layer a serving path needs from day one
+(DESIGN.md §11): a query that cannot be answered correctly and on time
+degrades into a *typed* partial response — never a hang, never a
+silently wrong payload.
+
+The contract, fault by fault (launch/faults.ServeFaultPlan injects all
+of these; tests/test_serve_roi.py asserts every row of the matrix):
+
+- **slow fetch** — each fetch attempt is preceded by a deadline check;
+  time lost to a slow storage tier surfaces as ``status="degraded"``
+  with the undelivered blocks named in ``missing_ranges``.
+- **failed fetch** — bounded retry with exponential backoff (sleeps
+  never overshoot the deadline); transient faults recover to
+  ``status="ok"``, exhausted budgets degrade.
+- **bit-flipped block** — every fetched block is crc32-verified against
+  the integrity manifest built from the authoritative store at
+  construction; a mismatch counts as a failed attempt and is retried
+  (the same crc/quarantine idiom as repro.checkpoint.ckpt).
+- **cache poison** — cache entries carry their crc and are verified on
+  every hit; a corrupt entry is quarantined (dropped + logged) and the
+  block re-fetched, so poison can never reach a payload.
+- **deadline exceeded / overload** — per-request deadlines bound every
+  loop, and admission control sheds load beyond ``max_in_flight``
+  concurrent queries with ``status="rejected"`` before any work starts.
+
+Contiguity is what makes the cache/fetch economics work: the ROI
+decomposes into curve ranges (serve/roi.py) and cache *misses* are
+fetched one contiguous run at a time — on a curve with good 3-D
+locality a whole query is a handful of sequential reads
+(``fetch_calls`` in the result records exactly how many).
+
+The service is thread-safe (query_batch drives it from a pool); the
+clock and sleep are injectable so the deadline machinery is exactly
+testable without real waiting.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from collections import OrderedDict
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .roi import (ROI, StoreLayout, _as_store5, extract_roi,
+                  merge_blocks_to_ranges, ranges_to_blocks, roi_to_ranges)
+
+__all__ = ["StencilQueryService", "QueryResult", "FetchError",
+           "QUERY_STATUSES"]
+
+#: the typed outcome vocabulary — every query ends in exactly one of these
+QUERY_STATUSES = ("ok", "degraded", "rejected", "error")
+
+
+class FetchError(RuntimeError):
+    """A storage fetch failed (transient or injected). Retried with
+    backoff up to the service's budget; never propagates to callers —
+    exhausted budgets surface as a degraded/error QueryResult."""
+
+
+@dataclass(frozen=True)
+class QueryResult:
+    """Typed outcome of one ROI query — the degraded-response schema
+    (DESIGN.md §11).
+
+    status:         "ok" (full payload) | "degraded" (partial payload,
+                    ``missing_ranges`` non-empty) | "rejected" (load
+                    shed at admission, no work done) | "error" (nothing
+                    deliverable)
+    roi:            the query box
+    payload:        dense ``(C,) + roi.shape`` array (C=1: plain 3-D);
+                    missing blocks' footprints hold ``fill_value``
+                    (NaN); None for rejected/error
+    missing_ranges: contiguous curve ranges NOT delivered — the explicit
+                    manifest a client needs to re-ask for exactly the
+                    missing data
+    ranges:         the full decomposition of the ROI
+    retries:        fetch attempts beyond the first, summed over ranges
+    integrity_failures: fetched blocks that failed manifest crc
+                    (bit-flip faults) — each also counts one retry
+    quarantined:    poisoned cache entries dropped by verify-on-hit
+    cache_hits/cache_misses/fetch_calls: cache economics of this query
+    elapsed_s:      service-clock duration
+    error:          human-readable reason for degraded/rejected/error
+    """
+    status: str
+    roi: ROI
+    payload: "np.ndarray | None" = None
+    missing_ranges: tuple = ()
+    ranges: tuple = ()
+    retries: int = 0
+    integrity_failures: int = 0
+    quarantined: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    fetch_calls: int = 0
+    elapsed_s: float = 0.0
+    error: "str | None" = None
+
+    def __post_init__(self):
+        if self.status not in QUERY_STATUSES:
+            raise ValueError(f"unknown status {self.status!r} "
+                             f"(expected one of {QUERY_STATUSES})")
+
+    @property
+    def complete(self) -> bool:
+        return self.status == "ok"
+
+
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+@dataclass
+class StencilQueryService:
+    """ROI queries over one block-store snapshot, hardened end to end.
+
+    store:        the ``(nb, T³)`` / ``(C, nb, T³)`` snapshot (numpy or
+                  device array; copied to host once)
+    layout:       :class:`StoreLayout` (or use :meth:`from_pipeline`)
+    fetch:        ``fetch(start, stop) -> (C, n, T, T, T)`` storage read
+                  of one contiguous curve range; default reads the
+                  snapshot. Fault injection wraps this
+                  (launch/faults.ServeFaultPlan).
+    cache_blocks: LRU capacity in blocks (0 disables caching)
+    deadline_s:   default per-request wall budget
+    max_retries:  fetch attempts per contiguous run beyond the first
+    backoff_s:    base of the exponential retry backoff
+    max_in_flight: admission budget — queries beyond this many
+                  concurrent are shed with status="rejected"
+    clock/sleep:  injectable time sources (tests pin them)
+    """
+    store: np.ndarray
+    layout: StoreLayout
+    fetch: "callable | None" = None
+    cache_blocks: int = 256
+    deadline_s: float = 1.0
+    max_retries: int = 2
+    backoff_s: float = 0.01
+    max_in_flight: int = 8
+    clock: "callable" = time.monotonic
+    sleep: "callable" = time.sleep
+
+    # internal state ------------------------------------------------------
+    _cache: "OrderedDict[int, tuple[np.ndarray, int]]" = field(
+        default_factory=OrderedDict, repr=False)
+    _lock: threading.RLock = field(default_factory=threading.RLock,
+                                   repr=False)
+    _in_flight: int = field(default=0, repr=False)
+    _stats: dict = field(default_factory=dict, repr=False)
+
+    def __post_init__(self):
+        self.store = np.asarray(self.store)
+        store5 = _as_store5(self.store, self.layout)
+        if self.fetch is None:
+            self.fetch = lambda a, b: store5[:, a:b]
+        # integrity manifest: authoritative per-block crc32, computed once
+        # from the snapshot — every fetched block and every cache hit is
+        # verified against it (the ckpt.py idiom, DESIGN.md §10/§11)
+        self._manifest = np.array(
+            [_crc(store5[:, b]) for b in range(self.layout.nb)],
+            dtype=np.int64)
+        self._stats = {"queries": 0, "shed": 0, "cache_hits": 0,
+                       "cache_misses": 0, "fetch_calls": 0,
+                       "quarantined": 0, "integrity_failures": 0,
+                       "retries": 0, "degraded": 0, "errors": 0}
+
+    @classmethod
+    def from_pipeline(cls, pipeline, store, **kw) -> "StencilQueryService":
+        """Front a pipeline's block store (e.g. the state a
+        ResidentPipeline run left behind)."""
+        return cls(store=np.asarray(store),
+                   layout=StoreLayout.from_pipeline(pipeline), **kw)
+
+    # -- cache (LRU, crc-carrying, verify-on-hit) -------------------------
+    def _cache_get(self, b: int) -> "np.ndarray | None":
+        """A verified cache hit, or None. A corrupt entry (crc mismatch
+        — cache poison) is quarantined: dropped, counted, re-fetched by
+        the caller. Never returns poisoned bytes."""
+        with self._lock:
+            hit = self._cache.get(b)
+            if hit is None:
+                return None
+            data, crc = hit
+            if _crc(data) != crc:
+                del self._cache[b]
+                self._stats["quarantined"] += 1
+                return "quarantined"
+            self._cache.move_to_end(b)
+            return data
+
+    def _cache_put(self, b: int, data: np.ndarray) -> None:
+        if self.cache_blocks <= 0:
+            return
+        data = np.ascontiguousarray(data)
+        data.setflags(write=False)
+        with self._lock:
+            self._cache[b] = (data, _crc(data))
+            self._cache.move_to_end(b)
+            while len(self._cache) > self.cache_blocks:
+                self._cache.popitem(last=False)
+
+    def poison_cache(self, b: int) -> bool:
+        """Fault injection: flip one bit of a cached block in place
+        (True when the block was cached). Verify-on-hit must quarantine
+        it — tests assert the payload stays bit-identical regardless."""
+        with self._lock:
+            hit = self._cache.get(b)
+            if hit is None:
+                return False
+            data = np.array(hit[0])  # writable copy, keep recorded crc
+            raw = data.reshape(-1).view(np.uint8)
+            raw[raw.size // 2] ^= 0x04
+            self._cache[b] = (data, hit[1])
+            return True
+
+    # -- fetch with deadline/retry/integrity ------------------------------
+    def _fetch_run(self, start: int, stop: int, t_end: float, res: dict
+                   ) -> "np.ndarray | None":
+        """One contiguous run read under the deadline: bounded retry with
+        exponential backoff; every block crc-verified against the
+        manifest. None when the budget (time or retries) is exhausted."""
+        attempt = 0
+        while True:
+            if self.clock() >= t_end:
+                res["error"] = "deadline exceeded"
+                return None
+            try:
+                res["fetch_calls"] += 1
+                data = np.asarray(self.fetch(start, stop))
+                if data.shape != (self.layout.channels, stop - start) + \
+                        (self.layout.T,) * 3:
+                    raise FetchError(f"short read: got {data.shape} for "
+                                     f"range [{start}, {stop})")
+                bad = [b for b in range(start, stop)
+                       if _crc(data[:, b - start]) != self._manifest[b]]
+                if bad:
+                    res["integrity_failures"] += len(bad)
+                    raise FetchError(
+                        f"integrity failure: crc mismatch on block(s) "
+                        f"{bad} of range [{start}, {stop})")
+                return data
+            except FetchError as e:
+                res["error"] = str(e)
+                if attempt >= self.max_retries:
+                    return None
+                attempt += 1
+                res["retries"] += 1
+                delay = self.backoff_s * (2 ** (attempt - 1))
+                remaining = t_end - self.clock()
+                if remaining <= 0:
+                    res["error"] = "deadline exceeded"
+                    return None
+                self.sleep(min(delay, remaining))
+
+    # -- the query --------------------------------------------------------
+    def query(self, roi: ROI, *, deadline_s: "float | None" = None
+              ) -> QueryResult:
+        """Answer one ROI query with a typed outcome — see the module
+        docstring for the full fault contract."""
+        t0 = self.clock()
+        with self._lock:
+            self._stats["queries"] += 1
+            if self._in_flight >= self.max_in_flight:
+                self._stats["shed"] += 1
+                return QueryResult(
+                    status="rejected", roi=roi,
+                    error=f"admission control: {self._in_flight} queries "
+                          f"in flight >= budget {self.max_in_flight}",
+                    elapsed_s=self.clock() - t0)
+            self._in_flight += 1
+        try:
+            return self._query_admitted(roi, deadline_s, t0)
+        finally:
+            with self._lock:
+                self._in_flight -= 1
+
+    def _query_admitted(self, roi: ROI, deadline_s, t0) -> QueryResult:
+        t_end = t0 + (self.deadline_s if deadline_s is None else deadline_s)
+        ranges = roi_to_ranges(self.layout, roi)
+        res = {"fetch_calls": 0, "retries": 0, "integrity_failures": 0,
+               "cache_hits": 0, "cache_misses": 0, "error": None}
+        got: dict[int, np.ndarray] = {}
+        missing: list[int] = []
+        quarantined = 0
+        for start, stop in ranges:
+            # cache pass: verified hits; poisoned entries quarantine here
+            miss: list[int] = []
+            for b in range(start, stop):
+                if self.clock() >= t_end:
+                    res["error"] = "deadline exceeded"
+                    miss = None
+                    break
+                hit = self._cache_get(b)
+                if isinstance(hit, np.ndarray):
+                    res["cache_hits"] += 1
+                    got[b] = hit
+                    continue
+                if hit == "quarantined":
+                    quarantined += 1
+                res["cache_misses"] += 1
+                miss.append(b)
+            if miss is None:  # deadline tripped mid-scan
+                missing.extend(b for b in range(start, stop) if b not in got)
+                continue
+            # fetch pass: contiguous runs of misses, one storage read each
+            for m0, m1 in merge_blocks_to_ranges(np.asarray(miss)):
+                data = self._fetch_run(m0, m1, t_end, res)
+                if data is None:
+                    missing.extend(range(m0, m1))
+                    continue
+                for b in range(m0, m1):
+                    blk = data[:, b - m0]
+                    got[b] = blk
+                    self._cache_put(b, blk)
+        elapsed = self.clock() - t0
+        with self._lock:
+            for k in ("cache_hits", "cache_misses", "fetch_calls",
+                      "retries", "integrity_failures"):
+                self._stats[k] += res[k]
+        missing_ranges = tuple(merge_blocks_to_ranges(np.asarray(missing)))
+        if missing and not got:
+            with self._lock:
+                self._stats["errors"] += 1
+            return QueryResult(
+                status="error", roi=roi, payload=None,
+                missing_ranges=missing_ranges, ranges=tuple(ranges),
+                retries=res["retries"],
+                integrity_failures=res["integrity_failures"],
+                quarantined=quarantined, cache_hits=res["cache_hits"],
+                cache_misses=res["cache_misses"],
+                fetch_calls=res["fetch_calls"], elapsed_s=elapsed,
+                error=res["error"] or "no blocks deliverable")
+        payload = self._assemble(roi, ranges, got)
+        status = "ok" if not missing else "degraded"
+        if missing:
+            with self._lock:
+                self._stats["degraded"] += 1
+        return QueryResult(
+            status=status, roi=roi, payload=payload,
+            missing_ranges=missing_ranges, ranges=tuple(ranges),
+            retries=res["retries"],
+            integrity_failures=res["integrity_failures"],
+            quarantined=quarantined, cache_hits=res["cache_hits"],
+            cache_misses=res["cache_misses"],
+            fetch_calls=res["fetch_calls"], elapsed_s=elapsed,
+            error=res["error"] if missing else None)
+
+    def _assemble(self, roi: ROI, ranges, got: dict) -> np.ndarray:
+        """Blocks → dense ROI box via the shared extract_roi decoder,
+        with undelivered blocks left at NaN (the degraded fill)."""
+        lay = self.layout
+        sub = np.zeros((lay.channels, lay.nb) + (lay.T,) * 3,
+                       dtype=self.store.dtype)
+        for b, blk in got.items():
+            sub[:, b] = blk
+        skip = [b for b in ranges_to_blocks(ranges) if int(b) not in got]
+        # C=1 payloads are plain 3-D boxes (the store convention)
+        return extract_roi(sub if lay.channels > 1 else sub[0], lay, roi,
+                           ranges=ranges, skip_blocks=skip)
+
+    def query_batch(self, rois, *, deadline_s: "float | None" = None,
+                    max_workers: "int | None" = None) -> list:
+        """Concurrent batch of queries (order-preserving). Each query is
+        independently admitted/deadlined; overload surfaces as typed
+        ``rejected`` results, never an exception."""
+        workers = max_workers or min(len(rois), self.max_in_flight + 2) or 1
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            return list(ex.map(
+                lambda r: self.query(r, deadline_s=deadline_s), rois))
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(self._stats, cached_blocks=len(self._cache),
+                        in_flight=self._in_flight)
